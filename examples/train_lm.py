@@ -1,0 +1,86 @@
+"""End-to-end training driver example: a qwen3-family LM for a few hundred
+steps on CPU, with checkpointing and an injected failure mid-run to
+demonstrate the fault-tolerant restart path.
+
+Default is a ~15M-parameter model sized for this single-core CPU container
+(a few seconds/step); ``--large`` selects the ~100M-parameter configuration
+(the same code path — use it on real hardware).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+(Use --small for a quick smoke run.)
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+
+from repro.configs import resolve, run_config, scaled_down
+from repro.data import TokenStream
+from repro.optim import AdamWConfig
+from repro.runtime.fault_tolerance import ResilientTrainer, flaky
+from repro.runtime.steps import make_init, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--large", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = resolve("qwen3")
+    if args.small:
+        cfg = scaled_down(base)
+        batch, seq = 8, 64
+    elif args.large:
+        # ~100M params: qwen3 family at half width/depth.
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=512, n_heads=8, n_kv_heads=4,
+            head_dim=64, d_ff=1536, vocab_size=32_768, dtype="float32",
+        )
+        batch, seq = 16, 128
+    else:
+        # ~15M params: single-CPU-core-sized same-family model.
+        cfg = dataclasses.replace(
+            base, n_layers=6, d_model=384, n_heads=6, n_kv_heads=3,
+            head_dim=64, d_ff=1024, vocab_size=8_192, dtype="float32",
+        )
+        batch, seq = 4, 64
+
+    rc = run_config(cfg.name, "train_4k", microbatches=1, remat="none")
+    rc = dataclasses.replace(
+        rc, learning_rate=1e-3, warmup_steps=20, xent_chunk=64,
+        attn_chunk_kv=64, flash_vjp=True,
+    )
+    init = make_init(cfg, rc)
+    params, opt = init(jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.name}-family, {n/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {batch} x seq {seq}")
+
+    stream = TokenStream(cfg, batch, seq, seed=0)
+    step = jax.jit(make_train_step(cfg, rc), donate_argnums=(0, 1))
+    trainer = ResilientTrainer(
+        train_step=step, stream=stream, ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        failure_hook=flaky({args.steps // 2}),  # mid-run node failure
+    )
+    params, opt = trainer.run(params, opt, args.steps)
+    stream.close()
+    r = trainer.report
+    k = max(len(r.losses) // 6, 1)
+    print(f"[train_lm] loss curve: "
+          + " -> ".join(f"{l:.3f}" for l in r.losses[::k]))
+    print(f"[train_lm] failures={r.failures} restores={r.restores} "
+          f"stragglers={r.stragglers} (run survived the injected failure)")
+    assert r.last_loss < r.losses[0]
+
+
+if __name__ == "__main__":
+    main()

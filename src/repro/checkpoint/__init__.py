@@ -1,0 +1,4 @@
+"""Checkpointing: atomic, hashed, async-capable, resharding-aware."""
+from .checkpoint import (  # noqa: F401
+    AsyncCheckpointer, device_put_like, latest_step, restore, save,
+)

@@ -1,0 +1,160 @@
+"""The paper's optimisation flow (Sec. II-C).
+
+For each (hardware configuration x layer grouping) candidate, estimate the
+four metrics, reject candidates violating the user constraints, and return
+the feasible candidate with minimum energy.  The cross-product is evaluated
+as a single jitted/vmapped XLA program (:func:`repro.core.metrics.evaluate_batch`),
+which is the JAX-native realisation of the paper's exhaustive sweep — the
+benchmark reports candidates/second.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fusion
+from . import metrics as M
+from .arch import Constraints, DLAConfig, default_config_space
+from .ir import NetworkIR
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowResult:
+    best_hw: DLAConfig
+    best_cuts: np.ndarray
+    best_metrics: M.Metrics
+    n_candidates: int
+    n_feasible: int
+    sweep_seconds: float
+    candidates_per_second: float
+
+    def describe(self) -> str:
+        groups = M.groups_from_cuts(self.best_cuts)
+        return (
+            f"best={self.best_hw.describe()} groups={[len(g) for g in groups]} "
+            f"BW={self.best_metrics.bandwidth_words/1e6:.2f}M words "
+            f"lat={self.best_metrics.latency_cycles/1e6:.2f}M cyc "
+            f"E={self.best_metrics.energy_nj/1e6:.2f} mJ "
+            f"A={self.best_metrics.area_um2/1e6:.2f} mm^2 "
+            f"({self.n_feasible}/{self.n_candidates} feasible, "
+            f"{self.candidates_per_second:,.0f} cand/s)"
+        )
+
+
+def _metrics_from_row(row: np.ndarray) -> M.Metrics:
+    return M.Metrics(
+        bandwidth_words=float(row[0]),
+        latency_cycles=float(row[1]),
+        energy_nj=float(row[2]),
+        area_um2=float(row[3]),
+    )
+
+
+def run_flow(
+    ir: NetworkIR,
+    *,
+    config_space: Sequence[DLAConfig] | None = None,
+    constraints: Constraints = Constraints(),
+    groupings: str | np.ndarray = "exhaustive",
+) -> FlowResult:
+    """Sweep (hw x grouping), filter by constraints, return min-energy point.
+
+    ``groupings``: "exhaustive" (all 2^(L-1)), "pool" (the paper's
+    pool-boundary policy plus layer-by-layer), "dp" (per-config optimal DP
+    grouping), or an explicit (C, L-1) bool array.
+    """
+    if config_space is None:
+        config_space = default_config_space()
+    feat = ir.feature_matrix()
+    L = feat.shape[0]
+
+    if isinstance(groupings, str):
+        if groupings == "exhaustive":
+            cuts_batch = fusion.enumerate_cuts(L)
+        elif groupings == "pool":
+            cuts_batch = np.stack(
+                [ir.pool_boundary_cuts(), fusion.layer_by_layer_cuts(L)]
+            )
+        elif groupings == "dp":
+            rows = [fusion.optimal_cuts_dp(ir).cuts, fusion.layer_by_layer_cuts(L)]
+            rows.append(ir.pool_boundary_cuts())
+            cuts_batch = np.unique(np.stack(rows), axis=0)
+        else:
+            raise ValueError(groupings)
+    else:
+        cuts_batch = np.asarray(groupings, dtype=bool)
+
+    hw_rows = np.stack([c.as_row() for c in config_space])
+    area_consts = M.area_consts_of(config_space[0])
+
+    t0 = time.perf_counter()
+    out = np.asarray(
+        M.evaluate_batch(
+            jnp.asarray(feat),
+            jnp.asarray(cuts_batch),
+            jnp.asarray(hw_rows),
+            jnp.asarray(area_consts),
+        )
+    )  # (H, C, 4)
+    dt = time.perf_counter() - t0
+
+    limits = constraints.as_row()  # (4,)
+    feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
+    n_cand = out.shape[0] * out.shape[1]
+    n_feas = int(feasible.sum())
+    if n_feas == 0:
+        raise ValueError("no candidate meets the constraints")
+    energy = np.where(feasible, out[:, :, 2], np.inf)
+    h, c = np.unravel_index(np.argmin(energy), energy.shape)
+    return FlowResult(
+        best_hw=config_space[h],
+        best_cuts=cuts_batch[c],
+        best_metrics=_metrics_from_row(out[h, c]),
+        n_candidates=n_cand,
+        n_feasible=n_feas,
+        sweep_seconds=dt,
+        candidates_per_second=n_cand / max(dt, 1e-9),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionComparison:
+    """Layer-by-layer vs fused metrics for one (network, hw) — the paper's
+    headline Sec. III numbers."""
+
+    lbl: M.Metrics
+    fused: M.Metrics
+    bw_reduction: float
+    latency_reduction: float
+    energy_reduction: float
+
+    def describe(self) -> str:
+        return (
+            f"BW  {self.lbl.bandwidth_words/1e6:8.2f}M -> {self.fused.bandwidth_words/1e6:8.2f}M  (-{self.bw_reduction*100:5.1f}%)\n"
+            f"lat {self.lbl.latency_cycles/1e6:8.2f}M -> {self.fused.latency_cycles/1e6:8.2f}M  (-{self.latency_reduction*100:5.1f}%)\n"
+            f"E   {self.lbl.energy_nj/1e6:8.2f}mJ-> {self.fused.energy_nj/1e6:8.2f}mJ (-{self.energy_reduction*100:5.1f}%)"
+        )
+
+
+def compare_fusion(
+    ir: NetworkIR,
+    hw: DLAConfig,
+    fused_cuts: np.ndarray | None = None,
+) -> FusionComparison:
+    """Evaluate the paper's fused-vs-layer-by-layer comparison on ``ir``."""
+    if fused_cuts is None:
+        fused_cuts = ir.pool_boundary_cuts()
+    lbl_cuts = fusion.layer_by_layer_cuts(len(ir))
+    lbl = M.evaluate_ref(ir, lbl_cuts, hw)
+    fus = M.evaluate_ref(ir, fused_cuts, hw)
+    return FusionComparison(
+        lbl=lbl,
+        fused=fus,
+        bw_reduction=1.0 - fus.bandwidth_words / lbl.bandwidth_words,
+        latency_reduction=1.0 - fus.latency_cycles / lbl.latency_cycles,
+        energy_reduction=1.0 - fus.energy_nj / lbl.energy_nj,
+    )

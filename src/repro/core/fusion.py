@@ -1,0 +1,160 @@
+"""Layer-fusion grouping search.
+
+The grouping space over an L-layer chain is the 2^(L-1) set of cut vectors.
+Three strategies, all returning cut vectors compatible with
+:mod:`repro.core.metrics`:
+
+* ``enumerate_cuts``      — full enumeration (the paper's predefined-set sweep;
+  fine for VGG-16's 13-18 layers).
+* ``pool boundary cuts``  — the paper's Sec. III policy (via
+  ``NetworkIR.pool_boundary_cuts``).
+* ``optimal_cuts_dp``     — O(L^2) chain-partition DP.  Valid because Eq. (1)
+  decomposes over groups (weights are grouping-independent; each group
+  contributes in_first + out_last), and latency & energy are affine in the
+  same per-group quantity, so one DP minimises all three simultaneously;
+  buffer feasibility is a per-group predicate.  Tests cross-check DP ==
+  brute force on random chains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .arch import DLAConfig
+from .ir import NetworkIR
+from . import metrics as M
+
+MAX_EXHAUSTIVE_LAYERS = 21  # 2^20 cut vectors ~ 1M candidates
+
+
+def enumerate_cuts(n_layers: int) -> np.ndarray:
+    """All 2^(L-1) cut vectors, shape (C, L-1), dtype bool."""
+    ncuts = n_layers - 1
+    if n_layers > MAX_EXHAUSTIVE_LAYERS:
+        raise ValueError(
+            f"{n_layers} layers -> 2^{ncuts} groupings; use optimal_cuts_dp"
+        )
+    if ncuts == 0:
+        return np.zeros((1, 0), dtype=bool)
+    idx = np.arange(2**ncuts, dtype=np.int64)
+    bits = (idx[:, None] >> np.arange(ncuts)[None, :]) & 1
+    return bits.astype(bool)
+
+
+def cuts_from_groups(groups: list[list[int]], n_layers: int) -> np.ndarray:
+    """Inverse of :func:`repro.core.metrics.groups_from_cuts`."""
+    cuts = np.zeros(n_layers - 1, dtype=bool)
+    pos = 0
+    for g in groups[:-1]:
+        pos += len(g)
+        cuts[pos - 1] = True
+    return cuts
+
+
+def layer_by_layer_cuts(n_layers: int) -> np.ndarray:
+    return np.ones(n_layers - 1, dtype=bool)
+
+
+def group_max_intermediate(feat: np.ndarray, cuts: np.ndarray) -> float:
+    """Largest on-chip intermediate frame implied by the grouping (words)."""
+    end = np.concatenate([cuts, [True]])
+    inter = np.where(end, 0.0, feat[:, M.F_OUT])
+    return float(inter.max(initial=0.0))
+
+
+def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float) -> bool:
+    return group_max_intermediate(feat, cuts) <= sram_budget_words
+
+
+def feasible_mask_batch(
+    feat: np.ndarray, cuts_batch: np.ndarray, sram_budget_words: float
+) -> np.ndarray:
+    """(C,) bool — vectorised buffer feasibility for a batch of groupings."""
+    end = np.concatenate(
+        [cuts_batch, np.ones((cuts_batch.shape[0], 1), dtype=bool)], axis=1
+    )
+    inter = np.where(end, 0.0, feat[None, :, M.F_OUT])
+    return inter.max(axis=1) <= sram_budget_words
+
+
+@dataclasses.dataclass(frozen=True)
+class DPResult:
+    cuts: np.ndarray
+    group_cost_words: float  # sum over groups of (in_first + out_last)
+    n_groups: int
+
+
+def optimal_cuts_dp(
+    ir: NetworkIR,
+    *,
+    sram_budget_words: float = float("inf"),
+    max_group_len: int | None = None,
+) -> DPResult:
+    """Min-bandwidth grouping via chain-partition DP (also min latency/energy).
+
+    dp[j] = min cost of partitioning layers [0..j]; a group [i..j] is feasible
+    iff every internal intermediate out_words fits the SRAM budget and the
+    group length is within ``max_group_len``.
+    """
+    feat = ir.feature_matrix()
+    L = feat.shape[0]
+    ins = feat[:, M.F_IN]
+    outs = feat[:, M.F_OUT]
+    INF = float("inf")
+    dp = np.full(L + 1, INF)
+    back = np.full(L + 1, -1, dtype=np.int64)
+    dp[0] = 0.0
+    for j in range(1, L + 1):  # dp index: first j layers
+        max_inter = 0.0
+        lo = 0 if max_group_len is None else max(0, j - max_group_len)
+        # iterate group starts i (0-based layer index) from j-1 down to lo
+        for i in range(j - 1, lo - 1, -1):
+            # group = layers [i .. j-1]; internal intermediates are outputs of
+            # layers i .. j-2
+            if i < j - 1:
+                max_inter = max(max_inter, outs[i])
+            if max_inter > sram_budget_words:
+                break  # growing the group further only increases max_inter
+            cost = dp[i] + ins[i] + outs[j - 1]
+            if cost < dp[j]:
+                dp[j] = cost
+                back[j] = i
+    if not np.isfinite(dp[L]):
+        raise ValueError("no feasible grouping under the SRAM budget")
+    # Reconstruct groups.
+    bounds = []
+    j = L
+    while j > 0:
+        bounds.append((back[j], j))
+        j = back[j]
+    bounds.reverse()
+    groups = [list(range(i, j)) for i, j in bounds]
+    cuts = cuts_from_groups(groups, L)
+    return DPResult(cuts=cuts, group_cost_words=float(dp[L]), n_groups=len(groups))
+
+
+def brute_force_min_bw(
+    ir: NetworkIR,
+    *,
+    sram_budget_words: float = float("inf"),
+    max_group_len: int | None = None,
+) -> DPResult:
+    """Exhaustive min-bandwidth grouping (test oracle for the DP)."""
+    feat = ir.feature_matrix()
+    L = feat.shape[0]
+    best_cost, best_cuts, best_groups = float("inf"), None, 0
+    for cuts in enumerate_cuts(L):
+        if not buffer_feasible(feat, cuts, sram_budget_words):
+            continue
+        groups = M.groups_from_cuts(cuts)
+        if max_group_len is not None and any(len(g) > max_group_len for g in groups):
+            continue
+        start, end = M.group_masks(cuts)
+        cost = float(feat[start, M.F_IN].sum() + feat[end, M.F_OUT].sum())
+        if cost < best_cost:
+            best_cost, best_cuts, best_groups = cost, cuts, len(groups)
+    if best_cuts is None:
+        raise ValueError("no feasible grouping under the SRAM budget")
+    return DPResult(cuts=best_cuts, group_cost_words=best_cost, n_groups=best_groups)

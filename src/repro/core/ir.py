@@ -1,0 +1,334 @@
+"""Layer-level intermediate representation for the pre-RTL evaluator.
+
+The paper (Yang & Chang, ISOCC'21) evaluates networks as chains of layers,
+each a convolution with ``N*Nih*Niw`` input frames, ``N*Nkh*Nkw*M`` filter
+kernels and ``M*Noh*Now`` output frames (Sec. II-B).  This module defines that
+layer abstraction plus builders for:
+
+* VGG-16 (the paper's own experiment, Sec. III),
+* transformer blocks (matmuls expressed as 1x1 convolutions over ``seq``
+  "pixels"), so the same evaluator / fusion flow runs over every assigned
+  architecture.
+
+Everything here is plain Python + numpy features extraction; the vectorised
+metric kernels live in :mod:`repro.core.metrics`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Layer kinds.  "conv" and "fc" carry weights; "pool" is weightless; "matmul"
+# covers transformer projections (weights) and "actmul" covers activation x
+# activation products (attention QK^T / PV) whose "weights" are activations
+# and therefore count as input traffic, not weight traffic.
+KINDS = ("conv", "pool", "fc", "matmul", "actmul", "elementwise")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer in the paper's notation.
+
+    ``n_in``/``n_out`` are N / M (input / output channels); ``h_in``/``w_in``
+    are Nih/Niw; ``kh``/``kw`` are Nkh/Nkw; ``h_out``/``w_out`` are Noh/Now.
+    ``pool_after`` > 1 means a pooling stage is *absorbed* into this layer's
+    write-out path (the DLA's inline ReLU/BN/pool functional unit, Fig. 1).
+    """
+
+    name: str
+    kind: str
+    n_in: int
+    n_out: int
+    h_in: int
+    w_in: int
+    kh: int = 1
+    kw: int = 1
+    stride: int = 1
+    pool_after: int = 1
+    flops_per_mac: int = 2
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+        if min(self.n_in, self.n_out, self.h_in, self.w_in) <= 0:
+            raise ValueError(f"non-positive dims in {self.name}")
+
+    # ---- derived geometry (SAME padding; stride then absorbed pool) --------
+    @property
+    def h_out(self) -> int:
+        return max(1, self.h_in // self.stride // self.pool_after)
+
+    @property
+    def w_out(self) -> int:
+        base = self.w_in // self.stride
+        return max(1, base // self.pool_after)
+
+    # ---- paper quantities (in words; the paper uses one word per element) --
+    @property
+    def weight_words(self) -> int:
+        """N*Nkh*Nkw*M for weighted layers; 0 for pool/actmul/elementwise."""
+        if self.kind in ("conv", "fc", "matmul"):
+            return self.n_in * self.kh * self.kw * self.n_out
+        return 0
+
+    @property
+    def in_words(self) -> int:
+        """N*Nih*Niw (+ the second operand for activation-activation products)."""
+        base = self.n_in * self.h_in * self.w_in
+        if self.kind == "actmul":
+            # QK^T / PV: the "kernel" operand is also an activation tensor.
+            base += self.n_in * self.kh * self.kw * self.n_out
+        return base
+
+    @property
+    def out_words(self) -> int:
+        """M*Noh*Now after the absorbed pool (what hits DRAM on write-out)."""
+        return self.n_out * self.h_out * self.w_out
+
+    @property
+    def out_words_prepool(self) -> int:
+        """M*Noh*Now before the absorbed pool (the on-chip intermediate)."""
+        return self.n_out * (self.h_in // self.stride) * (self.w_in // self.stride)
+
+    @property
+    def macs(self) -> int:
+        if self.kind in ("pool", "elementwise"):
+            return 0
+        return (
+            self.n_in
+            * self.kh
+            * self.kw
+            * self.n_out
+            * (self.h_in // self.stride)
+            * (self.w_in // self.stride)
+        )
+
+    @property
+    def flops(self) -> int:
+        return self.macs * self.flops_per_mac
+
+    def describe(self) -> str:
+        return (
+            f"{self.name:12s} {self.kind:5s} N={self.n_in:5d} M={self.n_out:5d} "
+            f"in={self.h_in}x{self.w_in} k={self.kh}x{self.kw}/{self.stride} "
+            f"pool={self.pool_after} W={self.weight_words} MACs={self.macs}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkIR:
+    """A chain of layers (the unit the fusion search partitions)."""
+
+    name: str
+    layers: tuple[LayerSpec, ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("empty network")
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_weight_words(self) -> int:
+        return sum(l.weight_words for l in self.layers)
+
+    # ---- feature matrix for the vectorised metric kernels ------------------
+    FEATURES = (
+        "weight_words",
+        "in_words",
+        "out_words",
+        "out_words_prepool",
+        "macs",
+        "is_pool",
+        "kh",
+        "kw",
+        "n_in",
+        "n_out",
+        "pixels_out",
+    )
+
+    def feature_matrix(self) -> np.ndarray:
+        """(L, F) float64 matrix consumed by :mod:`repro.core.metrics`."""
+        rows = []
+        for l in self.layers:
+            rows.append(
+                [
+                    l.weight_words,
+                    l.in_words,
+                    l.out_words,
+                    l.out_words_prepool,
+                    l.macs,
+                    1.0 if l.kind == "pool" else 0.0,
+                    l.kh,
+                    l.kw,
+                    l.n_in,
+                    l.n_out,
+                    (l.h_in // l.stride) * (l.w_in // l.stride),
+                ]
+            )
+        return np.asarray(rows, dtype=np.float64)
+
+    def pool_boundary_cuts(self) -> np.ndarray:
+        """The paper's VGG-16 grouping: cut after every pooling stage.
+
+        Returns a boolean cut vector of length L-1 (cut[i] == True means a
+        group boundary between layer i and layer i+1).
+        """
+        L = len(self.layers)
+        cuts = np.zeros(L - 1, dtype=bool)
+        for i, l in enumerate(self.layers[:-1]):
+            if l.kind == "pool" or l.pool_after > 1:
+                cuts[i] = True
+        return cuts
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+VGG16_CONV_PLAN = (
+    # (name, n_in, n_out, spatial, pool_after_this_layer)
+    ("conv1_1", 3, 64, 224, False),
+    ("conv1_2", 64, 64, 224, True),
+    ("conv2_1", 64, 128, 112, False),
+    ("conv2_2", 128, 128, 112, True),
+    ("conv3_1", 128, 256, 56, False),
+    ("conv3_2", 256, 256, 56, False),
+    ("conv3_3", 256, 256, 56, True),
+    ("conv4_1", 256, 512, 28, False),
+    ("conv4_2", 512, 512, 28, False),
+    ("conv4_3", 512, 512, 28, True),
+    ("conv5_1", 512, 512, 14, False),
+    ("conv5_2", 512, 512, 14, False),
+    ("conv5_3", 512, 512, 14, True),
+)
+
+
+def vgg16_ir(*, pool_mode: str = "separate", include_fc: bool = False) -> NetworkIR:
+    """VGG-16 feature extractor as used in the paper's Sec. III experiment.
+
+    pool_mode:
+      * ``"separate"``  — pooling layers are standalone layers (the naive
+        layer-by-layer execution round-trips them through DRAM; fusion absorbs
+        them into the group).  This is the accounting that reproduces the
+        paper's 55.6 % bandwidth-reduction number.
+      * ``"absorbed"``  — pooling runs inside the producing conv's functional
+        unit even in layer-by-layer mode (no standalone pool layers).
+    """
+    if pool_mode not in ("separate", "absorbed"):
+        raise ValueError(pool_mode)
+    layers: list[LayerSpec] = []
+    for name, n_in, n_out, hw, pooled in VGG16_CONV_PLAN:
+        if pooled and pool_mode == "absorbed":
+            layers.append(
+                LayerSpec(name, "conv", n_in, n_out, hw, hw, 3, 3, 1, pool_after=2)
+            )
+        else:
+            layers.append(LayerSpec(name, "conv", n_in, n_out, hw, hw, 3, 3, 1))
+            if pooled:
+                layers.append(
+                    LayerSpec(
+                        f"pool{name[4]}", "pool", n_out, n_out, hw, hw, 2, 2, 2
+                    )
+                )
+    if include_fc:
+        layers.append(LayerSpec("fc6", "fc", 512 * 7 * 7, 4096, 1, 1))
+        layers.append(LayerSpec("fc7", "fc", 4096, 4096, 1, 1))
+        layers.append(LayerSpec("fc8", "fc", 4096, 1000, 1, 1))
+    return NetworkIR("vgg16", tuple(layers))
+
+
+def transformer_block_ir(
+    *,
+    name: str,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_ff: int,
+    seq_len: int,
+    ffn_act: str = "swiglu",
+    n_experts: int = 0,
+    top_k: int = 1,
+) -> NetworkIR:
+    """One transformer block as a layer chain for the evaluator.
+
+    Matmuls become 1x1 convolutions over ``seq_len`` pixels (h_in=seq, w_in=1)
+    with channels = feature dims.  Attention's QK^T and PV products are
+    ``actmul`` layers (both operands are activations).  For MoE blocks the MLP
+    matmuls carry the *active* expert weights (top_k experts worth of compute;
+    weight traffic scales with the experts actually streamed from DRAM).
+    """
+    hd = d_model // n_heads
+    kv_dim = n_kv_heads * hd
+    layers = [
+        LayerSpec(f"{name}.q", "matmul", d_model, d_model, seq_len, 1),
+        LayerSpec(f"{name}.kv", "matmul", d_model, 2 * kv_dim, seq_len, 1),
+        # QK^T: contraction over head_dim, output seq x seq per head.
+        LayerSpec(f"{name}.qk", "actmul", d_model, n_heads * seq_len, seq_len, 1),
+        # PV: contraction over seq, output seq x d_model.
+        LayerSpec(f"{name}.pv", "actmul", n_heads * seq_len, d_model, seq_len, 1),
+        LayerSpec(f"{name}.o", "matmul", d_model, d_model, seq_len, 1),
+    ]
+    mult = 2 if ffn_act == "swiglu" else 1  # gate + up projections
+    k = max(1, top_k)
+    if n_experts > 1:
+        layers.append(
+            LayerSpec(f"{name}.moe_w1", "matmul", d_model, mult * d_ff * k, seq_len, 1)
+        )
+        layers.append(
+            LayerSpec(f"{name}.moe_w2", "matmul", d_ff * k, d_model, seq_len, 1)
+        )
+    else:
+        layers.append(LayerSpec(f"{name}.w1", "matmul", d_model, mult * d_ff, seq_len, 1))
+        layers.append(LayerSpec(f"{name}.w2", "matmul", d_ff, d_model, seq_len, 1))
+    return NetworkIR(name, tuple(layers))
+
+
+def lm_ir(
+    *,
+    name: str,
+    n_layers: int,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_ff: int,
+    seq_len: int,
+    n_experts: int = 0,
+    top_k: int = 1,
+    repeat: int = 1,
+) -> NetworkIR:
+    """A (possibly truncated) LM as one chain; ``repeat`` caps emitted blocks.
+
+    The evaluator's fusion search is per-chain; transformer LMs are periodic,
+    so evaluating ``repeat`` blocks and scaling by ``n_layers / repeat`` is
+    exact for periodic stacks (validated in tests).
+    """
+    blocks = []
+    for b in range(min(repeat, n_layers)):
+        blk = transformer_block_ir(
+            name=f"{name}.b{b}",
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv_heads,
+            d_ff=d_ff,
+            seq_len=seq_len,
+            n_experts=n_experts,
+            top_k=top_k,
+        )
+        blocks.extend(blk.layers)
+    return NetworkIR(name, tuple(blocks))
+
+
+def chain_ir(name: str, layers: Iterable[LayerSpec]) -> NetworkIR:
+    return NetworkIR(name, tuple(layers))

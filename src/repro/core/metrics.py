@@ -1,0 +1,274 @@
+"""Evaluation metrics — Eq. (1)-(4) of the paper.
+
+Two implementations, kept deliberately in lock-step (tests assert equality):
+
+* ``*_ref``      — direct, readable transcriptions of the equations operating
+  on :class:`repro.core.ir.NetworkIR` + a cut vector.  These are the oracle.
+* ``evaluate_batch`` — a vectorised jnp version broadcast over a batch of
+  hardware configurations (H) x a batch of fusion groupings (C), so the
+  paper's exhaustive optimisation flow (Sec. II-C) runs as ONE jitted XLA
+  program instead of a Python loop over ~5 M candidates.
+
+Grouping representation: a boolean *cut vector* ``cuts`` of length ``L-1``;
+``cuts[i]`` True means a fusion-group boundary between layer ``i`` and
+``i+1``.  Layer-by-layer execution is ``cuts = all True``; whole-network
+fusion is ``all False``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import DLAConfig
+from .ir import NetworkIR
+
+# Staging buffer (words) for tiles streamed directly from/to DRAM at group
+# edges — a group's first input and last output never need full-frame SRAM.
+STAGING_WORDS = 4096.0
+
+
+def group_masks(cuts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(start, end) boolean masks of shape (L,) from a cut vector (L-1,)."""
+    cuts = np.asarray(cuts, dtype=bool)
+    L = cuts.shape[0] + 1
+    start = np.concatenate([[True], cuts])
+    end = np.concatenate([cuts, [True]])
+    assert start.shape == (L,) and end.shape == (L,)
+    return start, end
+
+
+def groups_from_cuts(cuts: np.ndarray) -> list[list[int]]:
+    """Explicit group index lists (for printing / brute-force tests)."""
+    start, _ = group_masks(cuts)
+    groups: list[list[int]] = []
+    for i, s in enumerate(start):
+        if s:
+            groups.append([i])
+        else:
+            groups[-1].append(i)
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations (the paper's equations, verbatim)
+# ---------------------------------------------------------------------------
+
+
+def bandwidth_ref(ir: NetworkIR, cuts: np.ndarray) -> float:
+    """Eq. (1): BW = sum_p { sum_q {N Nkh Nkw M}_Lpq + N Nih Niw + Noh Now M }_Lp."""
+    start, end = group_masks(cuts)
+    bw = 0.0
+    for i, l in enumerate(ir.layers):
+        bw += l.weight_words  # every layer's weights stream from DRAM
+        if start[i]:
+            bw += l.in_words  # group input frame read
+        if end[i]:
+            bw += l.out_words  # group output frame write
+    return bw
+
+
+def latency_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+    """Eq. (2): L = sum_p { sum_q {t_rd_W + t_PB + t_PL}_Lpq + t_rd_IF + t_wr_OF }_Lp."""
+    start, end = group_masks(cuts)
+    lat = 0.0
+    for i, l in enumerate(ir.layers):
+        lat += l.weight_words / hw.dram_words_per_cycle  # t_rd_W
+        lat += hw.pe_busy_cycles(  # t_PB
+            macs=l.macs,
+            n_in=l.n_in,
+            n_out=l.n_out,
+            kh=l.kh,
+            kw=l.kw,
+            pixels_out=(l.h_in // l.stride) * (l.w_in // l.stride),
+        )
+        lat += hw.pipeline_latency  # t_PL
+        if start[i]:
+            lat += l.in_words / hw.dram_words_per_cycle  # t_rd_IF
+        if end[i]:
+            lat += l.out_words / hw.dram_words_per_cycle  # t_wr_OF
+    return lat
+
+
+def sram_accesses_ref(ir: NetworkIR) -> float:
+    """C_SRAM: every layer operand passes on-chip SRAM exactly once,
+    independent of grouping (fusion only changes what *also* touches DRAM)."""
+    return float(sum(l.weight_words + l.in_words + l.out_words for l in ir.layers))
+
+
+def pe_energy_count_ref(ir: NetworkIR, hw: DLAConfig) -> float:
+    """C_PE: busy cycles x pe_units (per-PE-cycle or per-block-cycle)."""
+    total = 0.0
+    for l in ir.layers:
+        total += hw.pe_busy_cycles(
+            macs=l.macs,
+            n_in=l.n_in,
+            n_out=l.n_out,
+            kh=l.kh,
+            kw=l.kw,
+            pixels_out=(l.h_in // l.stride) * (l.w_in // l.stride),
+        )
+    return total * hw.pe_units
+
+
+# Back-compat alias (pre-calibration name).
+pe_block_cycles_ref = pe_energy_count_ref
+
+
+def energy_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+    """Eq. (3): E = E_DRAM*C_DRAM + E_SRAM*C_SRAM + E_PB*C_PB   [nJ]."""
+    c_dram = bandwidth_ref(ir, cuts)
+    c_sram = sram_accesses_ref(ir)
+    c_pb = pe_energy_count_ref(ir, hw)
+    return hw.e_dram_nj * c_dram + hw.e_sram_nj * c_sram + hw.e_pb_nj * c_pb
+
+
+def buffer_words_ref(ir: NetworkIR, cuts: np.ndarray) -> tuple[float, float, float]:
+    """SRAM sizing (IF, W, OF) in words for Eq. (4).
+
+    Fused intermediates ping-pong between the input and output frame SRAMs;
+    group-edge tensors stream through small staging buffers.  Weight SRAM
+    holds the largest single layer's kernels.
+    """
+    start, end = group_masks(cuts)
+    if_need, of_need = STAGING_WORDS, STAGING_WORDS
+    for i, l in enumerate(ir.layers):
+        src = STAGING_WORDS if start[i] else float(ir.layers[i].in_words)
+        dst = STAGING_WORDS if end[i] else float(l.out_words)
+        if_need = max(if_need, src)
+        of_need = max(of_need, dst)
+    w_need = max(float(l.weight_words) for l in ir.layers)
+    return if_need, w_need, of_need
+
+
+def area_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+    """Eq. (4): A = A_PB + A_IFM + A_WB + A_OFM   [um^2]."""
+    if_w, w_w, of_w = buffer_words_ref(ir, cuts)
+    return hw.area_um2(if_sram_words=if_w, w_sram_words=w_w, of_sram_words=of_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    bandwidth_words: float
+    latency_cycles: float
+    energy_nj: float
+    area_um2: float
+
+    def meets(self, c) -> bool:
+        return (
+            self.bandwidth_words <= c.max_bandwidth_words
+            and self.latency_cycles <= c.max_latency_cycles
+            and self.energy_nj <= c.max_energy_nj
+            and self.area_um2 <= c.max_area_um2
+        )
+
+
+def evaluate_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> Metrics:
+    return Metrics(
+        bandwidth_words=bandwidth_ref(ir, cuts),
+        latency_cycles=latency_ref(ir, cuts, hw),
+        energy_nj=energy_ref(ir, cuts, hw),
+        area_um2=area_ref(ir, cuts, hw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorised implementation (jnp) — (H configs) x (C groupings) in one program
+# ---------------------------------------------------------------------------
+
+# Feature column indices (must match NetworkIR.FEATURES order).
+F_W, F_IN, F_OUT, F_OUT_PRE, F_MACS, F_ISPOOL, F_KH, F_KW, F_NIN, F_NOUT, F_PIX = range(11)
+# HW row indices (must match DLAConfig.ROW_FIELDS order).
+(H_F1, H_F2, H_F3, H_F4, H_MPP, H_DWPC, H_TPL, H_EDRAM, H_ESRAM, H_EPB,
+ H_PEU) = range(11)
+
+
+def _ceil_div(a, b):
+    return jnp.ceil(a / b)
+
+
+def _pe_busy_cycles_vec(feat: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
+    """t_PB per layer, (L,) given one hw row — branch on PE style."""
+    co = _ceil_div(feat[:, F_NOUT], hw[H_F1])
+    ci = _ceil_div(feat[:, F_NIN], hw[H_F4])
+    px_h = _ceil_div(feat[:, F_PIX], hw[H_F2] * hw[H_F3])  # hsiao: F2*F3 pixels
+    kc_h = _ceil_div(feat[:, F_KH] * feat[:, F_KW], 9.0)
+    px_v = _ceil_div(feat[:, F_PIX], hw[H_F2])  # vwa: F2 rows
+    kc_v = feat[:, F_KH] * _ceil_div(feat[:, F_KW], 3.0)
+    is_hsiao = hw[H_MPP] == 9
+    cyc = jnp.where(is_hsiao, co * ci * px_h * kc_h, co * ci * px_v * kc_v)
+    return jnp.where(feat[:, F_MACS] > 0, cyc, 0.0)
+
+
+def _evaluate_one(feat: jnp.ndarray, cuts: jnp.ndarray, hw: jnp.ndarray,
+                  area_consts: jnp.ndarray) -> jnp.ndarray:
+    """Metrics for one (grouping, hw) pair -> (4,) [bw, lat, energy, area]."""
+    L = feat.shape[0]
+    start = jnp.concatenate([jnp.ones((1,), bool), cuts])
+    end = jnp.concatenate([cuts, jnp.ones((1,), bool)])
+
+    # Eq. (1)
+    bw = (
+        jnp.sum(feat[:, F_W])
+        + jnp.sum(jnp.where(start, feat[:, F_IN], 0.0))
+        + jnp.sum(jnp.where(end, feat[:, F_OUT], 0.0))
+    )
+
+    # Eq. (2)
+    t_pb = _pe_busy_cycles_vec(feat, hw)
+    lat = (
+        jnp.sum(feat[:, F_W]) / hw[H_DWPC]
+        + jnp.sum(t_pb)
+        + L * hw[H_TPL]
+        + jnp.sum(jnp.where(start, feat[:, F_IN], 0.0)) / hw[H_DWPC]
+        + jnp.sum(jnp.where(end, feat[:, F_OUT], 0.0)) / hw[H_DWPC]
+    )
+
+    # Eq. (3)
+    c_sram = jnp.sum(feat[:, F_W] + feat[:, F_IN] + feat[:, F_OUT])
+    c_pb = jnp.sum(t_pb) * hw[H_PEU]
+    energy = hw[H_EDRAM] * bw + hw[H_ESRAM] * c_sram + hw[H_EPB] * c_pb
+
+    # Eq. (4)
+    src = jnp.where(start, STAGING_WORDS, feat[:, F_IN])
+    dst = jnp.where(end, STAGING_WORDS, feat[:, F_OUT])
+    if_need = jnp.maximum(jnp.max(src), STAGING_WORDS)
+    of_need = jnp.maximum(jnp.max(dst), STAGING_WORDS)
+    w_need = jnp.max(feat[:, F_W])
+    a_mult, a_pe_ovh, a_byte, a_ctrl = area_consts
+    n_pes = hw[H_F1] * hw[H_F4] * hw[H_F2] * hw[H_F3]
+    area = (
+        n_pes * (hw[H_MPP] * a_mult + a_pe_ovh)
+        + (if_need + w_need + of_need) * a_byte
+        + a_ctrl
+    )
+    return jnp.stack([bw, lat, energy, area])
+
+
+@partial(jax.jit, static_argnames=())
+def evaluate_batch(
+    feat: jnp.ndarray,  # (L, F) float
+    cuts_batch: jnp.ndarray,  # (C, L-1) bool
+    hw_rows: jnp.ndarray,  # (H, 10) float
+    area_consts: jnp.ndarray,  # (4,) float
+) -> jnp.ndarray:
+    """All metrics for every (hw, grouping) pair -> (H, C, 4)."""
+    per_cut = jax.vmap(_evaluate_one, in_axes=(None, 0, None, None))
+    per_hw = jax.vmap(per_cut, in_axes=(None, None, 0, None))
+    return per_hw(feat, cuts_batch, hw_rows, area_consts)
+
+
+def area_consts_of(hw: DLAConfig) -> np.ndarray:
+    return np.asarray(
+        [
+            hw.area_per_mult_um2,
+            hw.area_per_pe_overhead_um2,
+            hw.area_per_sram_byte_um2,
+            hw.area_controller_um2,
+        ],
+        dtype=np.float64,
+    )

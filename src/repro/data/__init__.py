@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (counter-based, restart-safe)."""
+from .pipeline import TokenStream, make_batch  # noqa: F401

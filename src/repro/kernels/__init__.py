@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the fusion groups the planner selects.
+
+Each kernel keeps a fusion group's intermediate tensors in VMEM (the TPU
+analogue of the paper's on-chip SRAM): the flash-attention score tile, the
+SwiGLU hidden activations, the conv3x3 pre-pool frame, and the selective
+scan's discretised transitions never round-trip through HBM.
+
+``ops.py`` holds the jit'd dispatch wrappers (planner-aware), ``ref.py``
+the pure-jnp oracles every kernel is validated against (interpret mode on
+CPU; see tests/test_kernels.py shape/dtype sweeps).
+"""

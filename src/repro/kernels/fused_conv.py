@@ -1,0 +1,82 @@
+"""Fused conv3x3 + bias + ReLU (+ 2x2 max-pool) — the paper's own workload.
+
+This is the kernel the paper's DLA executes (Fig. 1: PE array + the inline
+ReLU/BN/pool functional unit).  One fusion group = conv + activation +
+pool: the pre-pool output frame (Noh x Now x M, the ``out_words_prepool``
+quantity in the evaluator's area model) stays in VMEM; only the pooled
+frame is written to HBM — the exact traffic the evaluator's Eq. (1)
+credits a fused group.
+
+TPU adaptation of the 3x3 systolic dataflows in [2][3]: the 3x3 window is
+decomposed into 9 shifted (H*W, Cin) x (Cin, Cout-block) MXU matmuls (the
+MXU replaces the PE adder trees; F1..F4 become grid/block factors).  VGG
+feature maps (<= 224x224x64 = 6.4 MiB bf16) fit whole in VMEM, so the grid
+is (batch, Cout/block_c) with full-frame blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, H, W, pool):
+    x = x_ref[0].astype(jnp.float32)  # (H, W, Cin)
+    w = w_ref[...].astype(jnp.float32)  # (3, 3, Cin, bc)
+    b = b_ref[...].astype(jnp.float32)  # (bc,)
+    Cin = x.shape[-1]
+    bc = w.shape[-1]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros((H * W, bc), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = xp[dy : dy + H, dx : dx + W, :].reshape(H * W, Cin)
+            acc += jax.lax.dot_general(
+                patch, w[dy, dx], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    y = jnp.maximum(acc + b[None, :], 0.0).reshape(H, W, bc)
+    if pool:  # fused 2x2 max pool: pre-pool frame never leaves VMEM
+        y = y.reshape(H // 2, 2, W // 2, 2, bc).max(axis=(1, 3))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def fused_conv3x3(
+    x: jnp.ndarray,  # (B, H, W, Cin)
+    w: jnp.ndarray,  # (3, 3, Cin, Cout)
+    b: jnp.ndarray,  # (Cout,)
+    *,
+    pool: bool = False,
+    block_c: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    block_c = min(block_c, Cout)
+    assert Cout % block_c == 0
+    Ho, Wo = (H // 2, W // 2) if pool else (H, W)
+
+    kernel = functools.partial(_kernel, H=H, W=W, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Cout // block_c),
+        in_specs=[
+            pl.BlockSpec((1, H, W, Cin), lambda ib, jc: (ib, 0, 0, 0)),
+            pl.BlockSpec((3, 3, Cin, block_c), lambda ib, jc: (0, 0, 0, jc)),
+            pl.BlockSpec((block_c,), lambda ib, jc: (jc,)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, block_c), lambda ib, jc: (ib, 0, 0, jc)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Cout), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_bytes(H: int, W: int, Cin: int, block_c: int, dtype_bytes: int = 2) -> int:
+    return (
+        (H + 2) * (W + 2) * Cin * 4  # padded input frame (f32)
+        + 9 * Cin * block_c * dtype_bytes  # weights
+        + H * W * block_c * 4  # pre-pool accumulator (the fused frame)
+        + H * W * block_c * dtype_bytes  # out tile
+    )

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, chunk=0):
+    """Materialised-scores attention, GQA-aware.  Mirrors fused_attention."""
+    from ..models.layers import attention_reference
+
+    Sq, Skv = q.shape[1], k.shape[1]
+    return attention_reference(
+        q, k, v,
+        q_pos=jnp.arange(Sq), kv_pos=jnp.arange(Skv),
+        mixer=("attn_local" if window else ("attn_chunked" if chunk else "attn")),
+        causal=causal, window=window, chunk=chunk,
+    )
+
+
+def fused_mlp_ref(x, w1, w2, w3=None, *, act="swiglu"):
+    h = (x.astype(jnp.float32) @ w1.astype(jnp.float32))
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x.astype(jnp.float32) @ w3.astype(jnp.float32))
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x.astype(jnp.float32) @ w3.astype(jnp.float32))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return (h @ w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_conv3x3_ref(x, w, b, *, pool=False):
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = jnp.maximum(y + b.astype(jnp.float32), 0.0)
+    if pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    return y.astype(x.dtype)
+
+
+def selective_scan_ref(dA, dBx, C):
+    from ..models.ssm import selective_scan_reference
+
+    y, _ = selective_scan_reference(dA, dBx, C)
+    return y

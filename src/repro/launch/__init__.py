@@ -1,0 +1,1 @@
+"""Launch: production mesh, abstract input specs, dry-run, train/serve."""

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks on first backend init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract params/optimizer/cache/batch
+(ShapeDtypeStruct only — no allocation), shards them with the production
+rules, lowers the jitted step, compiles it for the 16x16 (single-pod,
+256 chips) or 2x16x16 (multi-pod, 512 chips) mesh, and records:
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+* ``compiled.cost_analysis()``    — per-device FLOPs / bytes,
+* collective bytes parsed from the post-SPMD HLO,
+* the three-term roofline (compute / memory / collective seconds).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3 --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --jobs 2 --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+
+from ..configs import SHAPES, all_cells, resolve, run_config, supported_shapes
+from ..core import roofline as RL
+from ..models import model as M
+from ..optim import AdamWConfig, init_opt_state
+from ..parallel import sharding as SH
+from ..runtime.steps import make_decode_step, make_prefill_step, make_train_step
+from . import input_specs as IS
+from .mesh import make_production_mesh
+
+OUT_DEFAULT = "experiments/dryrun"
+
+
+def _tree_bytes_per_device(tree, shardings) -> float:
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        shard_shape = sh.shard_shape(leaf.shape)
+        total += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+    return float(total)
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+        "alias_size_in_bytes", "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh_kind: str, rc_overrides: dict):
+    cfg = resolve(arch)
+    shape = SHAPES[shape_name]
+    rc = run_config(cfg.name, shape_name, **rc_overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    specs = IS.input_specs(cfg, shape, ring=rc.local_ring_cache)
+    aparams = M.abstract_params(cfg)
+    pshard = SH.param_shardings(mesh, aparams, fsdp=rc.fsdp)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(state_dtype=rc.opt_state_dtype)
+        aopt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), aparams)
+        oshard = SH.opt_state_shardings(mesh, aopt, pshard)
+        bshard = SH.batch_shardings(mesh, specs["batch"])
+        step = make_train_step(
+            cfg, rc, opt_cfg,
+            grad_shardings=pshard if rc.shard_grads else None,
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, aopt, specs["batch"])
+        resident = {
+            "params": _tree_bytes_per_device(aparams, pshard),
+            "opt": _tree_bytes_per_device(aopt, oshard),
+            "batch": _tree_bytes_per_device(specs["batch"], bshard),
+        }
+    elif shape.kind == "prefill":
+        cshard = SH.cache_shardings(mesh, specs["cache"], seq_shard=rc.seq_shard)
+        bshard = SH.batch_shardings(mesh, specs["batch"])
+        step = make_prefill_step(cfg, rc)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, cshard, bshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(1,),
+        )
+        args = (aparams, specs["cache"], specs["batch"])
+        resident = {
+            "params": _tree_bytes_per_device(aparams, pshard),
+            "cache": _tree_bytes_per_device(specs["cache"], cshard),
+            "batch": _tree_bytes_per_device(specs["batch"], bshard),
+        }
+    else:  # decode
+        cshard = SH.cache_shardings(mesh, specs["cache"], seq_shard=rc.seq_shard)
+        tshard = SH.batch_shardings(mesh, specs["tokens"], seq_shard=False)
+        step = make_decode_step(cfg, rc)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, cshard, tshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(1,),
+        )
+        args = (aparams, specs["cache"], specs["tokens"])
+        resident = {
+            "params": _tree_bytes_per_device(aparams, pshard),
+            "cache": _tree_bytes_per_device(specs["cache"], cshard),
+        }
+    return cfg, shape, rc, mesh, jitted, args, resident
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             rc_overrides: dict, tag: str = "") -> dict:
+    cfg, shape, rc, mesh, jitted, args, resident = build_cell(
+        arch, shape_name, mesh_kind, rc_overrides
+    )
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):  # resolves in-model sharding hints (P specs)
+        lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = _memory_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    rl = RL.roofline_from_compiled(
+        compiled,
+        model_flops_total=RL.model_flops(cfg, shape, kind=shape.kind),
+        n_chips=n_chips,
+        hlo_text=hlo,
+    )
+    record = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "tag": tag,
+        "run_config": dataclasses.asdict(rc),
+        "seconds": {"lower": t_lower, "compile": t_compile},
+        "memory_analysis": mem,
+        "resident_bytes_per_device": resident,
+        "resident_total_gib": sum(resident.values()) / 2**30,
+        "roofline": rl.row(),
+        "params": cfg.param_counts(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fname = out_dir / f"{cfg.name}__{shape.name}__{mesh_kind}{suffix}.json"
+    fname.write_text(json.dumps(record, indent=1))
+    print(
+        f"[dryrun] {cfg.name} {shape.name} {mesh_kind}{suffix}: "
+        f"compile {t_compile:.1f}s  resident {record['resident_total_gib']:.2f} GiB/dev  "
+        f"bound={rl.bound}  step>={rl.step_seconds*1e3:.1f} ms  "
+        f"mfu<={rl.mfu_bound*100:.1f}%",
+        flush=True,
+    )
+    print(f"  memory_analysis: {mem}", flush=True)
+    print(f"  cost: flops/dev={rl.flops:.3e} bytes/dev={rl.hbm_bytes:.3e} "
+          f"coll/dev={rl.coll_bytes:.3e} {rl.coll_breakdown}", flush=True)
+    return record
+
+
+def sweep(cells, mesh_kinds, out_dir: pathlib.Path, jobs: int, force: bool):
+    """Run cells in subprocesses (one compile per process, ``jobs`` wide)."""
+    work = []
+    for arch, shape in cells:
+        for mk in mesh_kinds:
+            suffix = out_dir / f"{arch}__{shape}__{mk}.json"
+            if not force and suffix.exists():
+                continue
+            work.append((arch, shape, mk))
+    print(f"[sweep] {len(work)} cells to run, jobs={jobs}")
+    procs: list[tuple[subprocess.Popen, tuple]] = []
+    failures = []
+    idx = 0
+    while idx < len(work) or procs:
+        while idx < len(work) and len(procs) < jobs:
+            arch, shape, mk = work[idx]
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mk,
+                "--out", str(out_dir),
+            ]
+            p = subprocess.Popen(cmd)
+            procs.append((p, work[idx]))
+            idx += 1
+        time.sleep(2.0)
+        still = []
+        for p, cell in procs:
+            if p.poll() is None:
+                still.append((p, cell))
+            elif p.returncode != 0:
+                failures.append(cell)
+                print(f"[sweep] FAILED {cell} rc={p.returncode}", flush=True)
+        procs = still
+    print(f"[sweep] done; {len(failures)} failures: {failures}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true", help="sweep all cells x meshes")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration records")
+    # perf levers (hillclimb)
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--remat", choices=("none", "dots", "full"))
+    ap.add_argument("--seq-shard", action="store_true", default=None)
+    ap.add_argument("--opt-dtype", choices=("float32", "bfloat16"))
+    ap.add_argument("--attn-chunk-kv", type=int)
+    ap.add_argument("--xent-chunk", type=int)
+    ap.add_argument("--mamba-chunk", type=int)
+    ap.add_argument("--flash-vjp", action="store_true", default=None)
+    ap.add_argument("--bf16-tiles", action="store_true", default=None)
+    ap.add_argument("--ring-cache", action="store_true", default=None)
+    ap.add_argument("--shard-grads", action="store_true", default=None)
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false", default=None)
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    mapping = {
+        "microbatches": args.microbatches,
+        "remat": args.remat,
+        "seq_shard": args.seq_shard,
+        "opt_state_dtype": args.opt_dtype,
+        "attn_chunk_kv": args.attn_chunk_kv,
+        "xent_chunk": args.xent_chunk,
+        "mamba_chunk": args.mamba_chunk,
+        "flash_vjp": args.flash_vjp,
+        "attn_bf16_tiles": args.bf16_tiles,
+        "local_ring_cache": args.ring_cache,
+        "shard_grads": args.shard_grads,
+        "fsdp": args.fsdp,
+    }
+    rc_overrides = {k: v for k, v in mapping.items() if v is not None}
+
+    if args.all:
+        failures = sweep(all_cells(), ("single", "multi"), out_dir, args.jobs, args.force)
+        sys.exit(1 if failures else 0)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    if args.shape not in supported_shapes(resolve(args.arch).name):
+        print(f"[dryrun] {args.arch} skips {args.shape} (see DESIGN.md)")
+        return
+    run_cell(args.arch, args.shape, args.mesh, out_dir, rc_overrides, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

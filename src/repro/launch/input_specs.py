@@ -1,0 +1,74 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+No device allocation happens here — the dry-run lowers against these
+stand-ins.  The same builders, called with ``concrete=True`` RNG data via
+``repro.data.pipeline``, feed the real train/serve drivers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig, ShapeConfig
+from ..models import model as M
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "frontend": _sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.frontend:
+        return {
+            "frontend": _sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S - cfg.frontend_len), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    return {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "frontend": _sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S), jnp.int32),
+        }
+    if cfg.frontend:
+        return {
+            "frontend": _sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S - cfg.frontend_len), jnp.int32),
+        }
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def decode_token_specs(shape: ShapeConfig):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *, ring: bool = False):
+    """KV/SSM cache sized for the cell's context (decode: prefilled)."""
+    return M.abstract_cache(cfg, shape.global_batch, shape.seq_len, ring=ring)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, ring: bool = False) -> dict:
+    """All abstract inputs for the cell's step function.
+
+    train  -> {"batch": ...}
+    prefill-> {"batch": ..., "cache": ...}
+    decode -> {"tokens": ..., "cache": ...}
+    """
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape),
+                "cache": cache_specs(cfg, shape, ring=ring)}
+    return {"tokens": decode_token_specs(shape),
+            "cache": cache_specs(cfg, shape, ring=ring)}

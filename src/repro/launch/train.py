@@ -1,0 +1,98 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3 ...``.
+
+Small-scale runnable on this CPU container (reduced configs); the same
+code path lowers for the production meshes (launch/dryrun.py proves it).
+Wires together: config registry -> model -> sharding rules -> data
+pipeline -> fault-tolerant trainer -> checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import time
+
+import jax
+
+from ..configs import SHAPES, resolve, run_config, scaled_down
+from ..data import TokenStream
+from ..models import model as M
+from ..optim import AdamWConfig, init_opt_state
+from ..parallel import sharding as SH
+from ..runtime.fault_tolerance import ResilientTrainer, flaky
+from ..runtime.steps import make_train_step
+from .mesh import make_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="scaled-down config (CPU-sized); full configs are "
+                         "for the dry-run meshes")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--inject-failures", default="",
+                    help="comma-separated steps to fail at (fault-tolerance demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = resolve(args.arch)
+    if args.reduced:
+        cfg = scaled_down(cfg)
+    rc = run_config(cfg.name, "train_4k", microbatches=1, remat="none")
+    rc = dataclasses.replace(
+        rc, learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+        xent_chunk=min(64, args.seq), attn_chunk_kv=min(64, args.seq),
+        mamba_chunk=16,
+    )
+
+    mesh = make_mesh((1, jax.device_count()), ("data", "model")) \
+        if jax.device_count() > 1 else make_mesh((1, 1), ("data", "model"))
+
+    key = jax.random.key(args.seed)
+    params = M.init_params(key, cfg)
+    opt_cfg = AdamWConfig(state_dtype=rc.opt_state_dtype,
+                          weight_decay=rc.weight_decay,
+                          grad_clip=rc.grad_clip)
+    opt_state = init_opt_state(params, opt_cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name} reduced={args.reduced} params={n_params:,}")
+
+    seq = args.seq
+    if cfg.frontend and not cfg.is_encoder_decoder:
+        seq = args.seq + cfg.frontend_len
+    stream = TokenStream(cfg, args.batch, seq, seed=args.seed)
+
+    with jax.set_mesh(mesh):
+        step_fn = jax.jit(make_train_step(cfg, rc, opt_cfg), donate_argnums=(0, 1))
+        hook = None
+        if args.inject_failures:
+            hook = flaky({int(s) for s in args.inject_failures.split(",")})
+        trainer = ResilientTrainer(
+            train_step=step_fn, stream=stream, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, failure_hook=hook,
+        )
+        t0 = time.perf_counter()
+        params, opt_state = trainer.run(params, opt_state, args.steps)
+        dt = time.perf_counter() - t0
+
+    r = trainer.report
+    print(
+        f"[train] {r.steps_run} steps in {dt:.1f}s "
+        f"({dt / max(r.steps_run, 1) * 1e3:.0f} ms/step)  "
+        f"loss {r.losses[0]:.4f} -> {r.last_loss:.4f}  "
+        f"failures={r.failures} restores={r.restores} "
+        f"stragglers={r.stragglers}"
+    )
+    stream.close()
+    return r
+
+
+if __name__ == "__main__":
+    main()

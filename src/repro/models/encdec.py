@@ -1,0 +1,182 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Audio frontend is a STUB per the task spec: the encoder consumes
+precomputed frame embeddings ``(B, S_enc, d)``.  Decoder layers are
+self-attention + cross-attention + FFN; cross-attention K/V are computed
+from the encoder output once and cached for decoding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def _init_enc_layer(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "norm_x": L.rmsnorm_init(cfg.d_model, dtype),
+        "xattn": L.init_attention(k2, cfg, dtype),
+        "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+        jax.random.split(ks[1], cfg.n_layers)
+    )
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_stack": enc,
+        "enc_final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "dec_stack": dec,
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg, rc, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, d) precomputed embeddings -> encoder states."""
+    positions = jnp.arange(frames.shape[1])
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm1"], x, cfg.rmsnorm_eps)
+        out, _ = L.attention_block(
+            p["attn"], h, cfg, mixer="attn", positions=positions,
+            causal=False, impl="chunked", kv_block=rc.attn_chunk_kv,
+        )
+        x = x + out
+        h = L.rmsnorm(p["norm2"], x, cfg.rmsnorm_eps)
+        return x + L.mlp_block(p["mlp"], h, cfg.ffn_act), None
+
+    from .transformer import _remat_wrap
+
+    x, _ = jax.lax.scan(_remat_wrap(body, rc), x, params["enc_stack"])
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.rmsnorm_eps)
+
+
+def cross_kv(params, cfg, enc_h: jnp.ndarray) -> dict:
+    """Per-decoder-layer cross-attention K/V, computed once.  Stacked (L, ...)."""
+    B, Se, d = enc_h.shape
+    hd = cfg.resolved_head_dim
+
+    def one(p):
+        k = (enc_h @ p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        v = (enc_h @ p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        return {"k": k, "v": v}
+
+    return jax.vmap(one)(params["dec_stack"])
+
+
+def decode_stack(params, cfg, rc, tokens: jnp.ndarray, xkv: dict,
+                 cache: dict | None = None):
+    """Decoder trunk.  cache: {"self": {k,v (L,B,max,KV,hd)}, "len"}."""
+    x = params["embed"][tokens]
+    cache_len = cache["len"] if cache is not None else None
+    positions = jnp.arange(x.shape[1])
+    if cache is not None:
+        positions = positions + cache_len
+    has_cache = cache is not None
+
+    def body(x, xs):
+        p, layer_xkv, self_c = xs
+        h = L.rmsnorm(p["norm1"], x, cfg.rmsnorm_eps)
+        attn_cache = (
+            {"k": self_c["k"], "v": self_c["v"], "len": cache_len} if has_cache else None
+        )
+        out, nc = L.attention_block(
+            p["attn"], h, cfg, mixer="attn", positions=positions,
+            cache=attn_cache, impl="chunked", kv_block=rc.attn_chunk_kv,
+        )
+        x = x + out
+        h = L.rmsnorm(p["norm_x"], x, cfg.rmsnorm_eps)
+        out, _ = L.attention_block(
+            p["xattn"], h, cfg, mixer="attn", positions=positions,
+            cross_kv=(layer_xkv["k"], layer_xkv["v"]),
+            impl="chunked", kv_block=rc.attn_chunk_kv,
+        )
+        x = x + out
+        h = L.rmsnorm(p["norm2"], x, cfg.rmsnorm_eps)
+        x = x + L.mlp_block(p["mlp"], h, cfg.ffn_act)
+        new_c = {"k": nc["k"], "v": nc["v"]} if nc is not None else None
+        return x, new_c
+
+    from .transformer import _remat_wrap
+
+    if has_cache:
+        xs = (params["dec_stack"], xkv, cache["self"])
+    else:
+        dummy = {"k": jnp.zeros((cfg.n_layers, 0)), "v": jnp.zeros((cfg.n_layers, 0))}
+        xs = (params["dec_stack"], xkv, dummy)
+
+        def body_nc(x, xs):  # no-cache variant (training)
+            p, layer_xkv, _ = xs
+            return body(x, (p, layer_xkv, None))
+
+    run = body if has_cache else body_nc
+    x, new_self = jax.lax.scan(_remat_wrap(run, rc), x, xs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    new_cache = None
+    if has_cache:
+        new_cache = {"self": new_self, "len": cache_len + tokens.shape[1]}
+    return x, new_cache
+
+
+def forward(params, cfg, rc, batch: dict, cache: dict | None = None):
+    """batch: {"frontend": (B, S_enc, d), "tokens": (B, S_dec)}.
+
+    Presence of ``batch["frontend"]`` selects encode (training / prefill);
+    decode steps omit it and reuse ``cache["xkv"]``.  Returns
+    (hidden, new_cache, aux=0).
+    """
+    if cache is not None and "frontend" not in batch:
+        xkv = cache["xkv"]  # decode: cross-KV computed at prefill
+        inner = {"self": cache["self"], "len": cache["len"]}
+        h, new_inner = decode_stack(params, cfg, rc, batch["tokens"], xkv, inner)
+        return h, {"xkv": xkv, **new_inner}, jnp.float32(0.0)
+    enc_h = encode(params, cfg, rc, batch["frontend"])
+    xkv = cross_kv(params, cfg, enc_h)
+    if cache is None:
+        h, _ = decode_stack(params, cfg, rc, batch["tokens"], xkv, None)
+        return h, None, jnp.float32(0.0)
+    inner = {"self": cache["self"], "len": cache["len"]}
+    h, new_inner = decode_stack(params, cfg, rc, batch["tokens"], xkv, inner)
+    return h, {"xkv": xkv, **new_inner}, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, enc_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    Ldec = cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((Ldec, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((Ldec, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        },
+        "xkv": {
+            "k": jnp.zeros((Ldec, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((Ldec, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }

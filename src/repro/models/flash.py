@@ -1,0 +1,168 @@
+"""Flash attention with a custom VJP (pure JAX; §Perf iteration lever).
+
+Plain AD through the chunked-attention scan saves the (Sq, kv_block)
+probability tile of *every* KV block for the backward pass — a
+(n_blocks, B, H, Sq, kv_block) f32 stack per layer that dominates both
+temp memory and HBM traffic of the baseline train cells (EXPERIMENTS.md
+§Perf, iteration 1).  The flash backward instead saves only
+``(q, k, v, out, lse)`` and recomputes each block's probabilities from the
+logsumexp — the paper's fusion principle applied to the *backward* pass:
+the probability "intermediate frame" never exists outside the fused group.
+
+``bf16_tiles=True`` additionally casts the probability tile to bf16 for
+the PV / dV matmuls (iteration 2): halves the tile traffic that remains,
+at <1e-2 relative error (validated in tests/test_flash_vjp.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import NEG_INF, attention_bias, repeat_kv
+
+
+def _mask_bias(q_pos, p_c, mixer, window, chunk):
+    return attention_bias(
+        q_pos, p_c, mixer=mixer, causal=True, window=window, chunk=chunk,
+        kv_len=None,
+    )
+
+
+def _fwd_scan(q, k, v, q_pos, kv_pos, *, mixer, window, chunk, kv_block,
+              bf16_tiles):
+    from ..parallel.sharding import DP, TP, hint
+
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if Skv % kv_block:
+        kv_block = Skv
+    n = Skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    qh = hint(q.astype(jnp.float32), DP, None, TP, None)
+    kb = k.reshape(B, n, kv_block, KV, hd)
+    vb = v.reshape(B, n, kv_block, KV, hd)
+    pb = kv_pos.reshape(n, kv_block)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, p_c = xs
+        k_r = hint(repeat_kv(k_c, H).astype(jnp.float32), DP, None, TP, None)
+        v_r = hint(repeat_kv(v_c, H).astype(jnp.float32), DP, None, TP, None)
+        s = jnp.einsum("bqhd,bchd->bhqc", qh, k_r) * scale
+        s = hint(s, DP, TP, None, None) + _mask_bias(q_pos, p_c, mixer, window,
+                                                     chunk)[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        if bf16_tiles:
+            # bf16 dot operands: the tile crosses HBM at 2 bytes, the MXU
+            # accumulates in f32 (preferred_element_type).
+            pv = jax.lax.dot_general(
+                p.astype(jnp.bfloat16),
+                v_r.astype(jnp.bfloat16),
+                (((3,), (1,)), ((0, 1), (0, 2))),  # (B,H,Sq,C) x (B,C,H,hd)
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            pv = jnp.einsum("bhqc,bchd->bhqd", p, v_r)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    acc0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb),
+    )
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, lse  # out in (B, H, Sq, hd)
+
+
+@functools.lru_cache(maxsize=64)
+def make_flash(mixer: str, window: int, chunk: int, kv_block: int,
+               bf16_tiles: bool):
+    """Build the custom-vjp flash attention for one static mask config."""
+
+    kw = dict(mixer=mixer, window=window, chunk=chunk, kv_block=kv_block,
+              bf16_tiles=bf16_tiles)
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_pos, kv_pos):
+        out, _ = _fwd_scan(q, k, v, q_pos, kv_pos, **kw)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, hd)
+
+    def fwd(q, k, v, q_pos, kv_pos):
+        out, lse = _fwd_scan(q, k, v, q_pos, kv_pos, **kw)
+        return (
+            jnp.moveaxis(out, 1, 2).astype(q.dtype),
+            (q, k, v, q_pos, kv_pos, out, lse),
+        )
+
+    def bwd(res, dout):
+        from ..parallel.sharding import DP, TP, hint
+
+        q, k, v, q_pos, kv_pos, out, lse = res
+        B, Sq, H, hd = q.shape
+        Skv, KV = k.shape[1], k.shape[2]
+        G = H // KV
+        block = kv_block if Skv % kv_block == 0 else Skv
+        n = Skv // block
+        scale = 1.0 / math.sqrt(hd)
+        qh = hint(q.astype(jnp.float32), DP, None, TP, None)
+        do = jnp.moveaxis(dout.astype(jnp.float32), 2, 1)  # (B,H,Sq,hd)
+        D = jnp.sum(do * out, axis=-1)  # (B,H,Sq)
+        kb = k.reshape(B, n, block, KV, hd)
+        vb = v.reshape(B, n, block, KV, hd)
+        pb = kv_pos.reshape(n, block)
+
+        def step(dq, xs):
+            k_c, v_c, p_c = xs
+            k_r = repeat_kv(k_c, H).astype(jnp.float32)
+            v_r = repeat_kv(v_c, H).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bchd->bhqc", qh, k_r) * scale
+            s = s + _mask_bias(q_pos, p_c, mixer, window, chunk)[None, None]
+            p = jnp.exp(s - lse[..., None])  # recomputed, never stored
+            tile_dt = jnp.bfloat16 if bf16_tiles else jnp.float32
+
+            def tdot(a, b, spec):
+                return jnp.einsum(
+                    spec, a.astype(tile_dt), b.astype(tile_dt),
+                    preferred_element_type=jnp.float32,
+                )
+
+            dv_r = tdot(p, do, "bhqc,bhqd->bchd")
+            dp = tdot(do, v_r, "bhqd,bchd->bhqc")
+            ds = (p * (dp - D[..., None]) * scale)
+            dq = dq + tdot(ds, k_r, "bhqc,bchd->bqhd")
+            dk_r = tdot(ds, qh, "bhqc,bqhd->bchd")
+            # fold repeated heads back onto the KV heads
+            dk_c = dk_r.reshape(B, block, KV, G, hd).sum(axis=3)
+            dv_c = dv_r.reshape(B, block, KV, G, hd).sum(axis=3)
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+        dq, (dk, dv) = jax.lax.scan(
+            step, dq0, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb)
+        )
+        dk = jnp.moveaxis(dk, 0, 1).reshape(B, Skv, KV, hd)
+        dv = jnp.moveaxis(dv, 0, 1).reshape(B, Skv, KV, hd)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                None, None)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention_vjp(q, k, v, *, q_pos, kv_pos, mixer="attn", window=0,
+                        chunk=0, kv_block=1024, bf16_tiles=False,
+                        logit_cap=0.0):
+    assert logit_cap == 0.0, "softcap unsupported in the flash-vjp path"
+    fn = make_flash(mixer, int(window), int(chunk), int(kv_block),
+                    bool(bf16_tiles))
+    return fn(q, k, v, q_pos, kv_pos)

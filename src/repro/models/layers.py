@@ -1,0 +1,530 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Conventions
+-----------
+* Activations: ``(batch, seq, ...)``; attention heads laid out
+  ``(batch, seq, heads, head_dim)``.
+* Every ``init_*`` returns a (nested) dict of ``jnp`` arrays; the matching
+  ``apply`` is a pure function of ``(params, inputs)``.
+* Numerics: parameters/activations in the config dtype (bf16 at scale);
+  softmax/normalisation statistics and attention accumulators in float32 —
+  the layer-fusion analogue of keeping the "intermediate frame" on chip in
+  high precision.
+* The **chunked attention** here is the pure-JAX realisation of the paper's
+  fused-layer idea for transformers: QK^T -> softmax -> PV execute as one
+  fusion group with the (Sq, Skv) score matrix tiled so it never exists in
+  HBM (online softmax over KV chunks).  ``repro.kernels.fused_attention``
+  is the Pallas version; ``attention_reference`` materialises the scores
+  and is the test oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation / positional encoding
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim // 2,) inverse frequencies."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate-half RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention masks (positions are absolute token indices)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_bias(
+    q_pos: jnp.ndarray,  # (Sq,)
+    kv_pos: jnp.ndarray,  # (Skv,)
+    *,
+    mixer: str,  # attn | attn_local | attn_chunked
+    causal: bool,
+    window: int,
+    chunk: int,
+    kv_len: jnp.ndarray | int | None = None,
+) -> jnp.ndarray:
+    """(Sq, Skv) additive float32 bias (0 or NEG_INF).
+
+    Negative kv positions are invalid (unwritten ring-buffer slots)."""
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if mixer == "attn_local":
+        ok &= (qp - kp) < window
+        if not causal:
+            ok &= (kp - qp) < window
+    elif mixer == "attn_chunked":
+        ok &= (qp // chunk) == (kp // chunk)
+    if kv_len is not None:
+        ok &= kp < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def ring_insert(buf: jnp.ndarray, new: jnp.ndarray, start) -> jnp.ndarray:
+    """Insert ``new`` (B, S, KV, hd) into a W-entry ring buffer keyed by
+    absolute position (slot = position % W).
+
+    S == 1: decode step at position ``start``.  S > 1: prefill — assumes
+    ``start == 0`` (the serving flow always primes the ring from scratch).
+    """
+    W = buf.shape[1]
+    S = new.shape[1]
+    if S == 1:
+        return jax.lax.dynamic_update_slice(
+            buf, new, (0, start % W, 0, 0)
+        )
+    if S >= W:
+        keep = jax.lax.slice_in_dim(new, S - W, S, axis=1)
+        return jnp.roll(keep, (S - W) % W, axis=1)
+    return jax.lax.dynamic_update_slice(buf, new, (0, 0, 0, 0))
+
+
+def ring_positions(W: int, p_last) -> jnp.ndarray:
+    """Absolute position held by each of the W ring slots after the token at
+    ``p_last`` was written (unwritten slots come out negative => masked)."""
+    return p_last - ((p_last - jnp.arange(W)) % W)
+
+
+# ---------------------------------------------------------------------------
+# Attention: reference (materialised scores) — the oracle
+# ---------------------------------------------------------------------------
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd) via head-index gather.
+
+    A gather (not a reshape-split) so GSPMD can shard the output H axis on
+    the model axis without factoring it into (KV, G) — the repeat is local
+    to each TP shard (k is small: 1/G of q).
+    """
+    KV = k.shape[2]
+    idx = jnp.arange(n_heads) // (n_heads // KV)
+    return jnp.take(k, idx, axis=2)
+
+
+def attention_reference(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    mixer: str = "attn",
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+    kv_len=None,
+    logit_cap: float = 0.0,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    kr = repeat_kv(k, H).astype(jnp.float32)
+    vr = repeat_kv(v, H).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32), kr) * scale
+    scores = softcap(scores, logit_cap)
+    bias = attention_bias(
+        q_pos, kv_pos, mixer=mixer, causal=causal, window=window, chunk=chunk,
+        kv_len=kv_len,
+    )
+    scores = scores + bias[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqc,bchd->bqhd", probs, vr)
+    return out.astype(q.dtype)
+
+
+def attention_decode(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)  (the cache)
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    mixer: str = "attn",
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+    kv_len=None,
+    logit_cap: float = 0.0,
+    seq_sharded: bool = False,
+) -> jnp.ndarray:
+    """Single-query attention in KV-head space (no head repeat).
+
+    The cache stays in its resident sharding (KV heads on TP; sequence on
+    DP for the batch-1 long-context cell) and each device reads only its
+    local shard — per-device HBM traffic is cache_bytes / n_chips, which is
+    what makes the decode cells memory- rather than collective-bound.
+    """
+    from ..parallel.sharding import DP, TP, hint
+
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)  # tiny; replication is fine
+    scale = 1.0 / math.sqrt(hd)
+    # Native-dtype dots with f32 accumulation: the KV cache streams from HBM
+    # once at its resident 2 bytes/element — an f32 cast here would triple
+    # the dominant decode traffic (§Perf gemma3 iteration 3).
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = hint(
+        softcap(s, logit_cap),
+        *( (None, TP, None, DP) if seq_sharded else (DP, TP, None, None) ),
+    )
+    bias = attention_bias(
+        q_pos, kv_pos, mixer=mixer, causal=causal, window=window, chunk=chunk,
+        kv_len=kv_len,
+    )  # (1, Skv)
+    s = s + bias[0][None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(k.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked online-softmax (fused-layer execution, pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def attention_chunked(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    mixer: str = "attn",
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+    kv_len=None,
+    logit_cap: float = 0.0,
+    kv_block: int = 1024,
+    seq_sharded: bool = False,
+) -> jnp.ndarray:
+    """Flash-style attention: lax.scan over KV blocks with running (m, l, acc).
+
+    The (Sq, kv_block) score tile is the only materialised intermediate —
+    the transformer instance of the paper's fusion groups (Sec. II-B): the
+    full (Sq, Skv) "intermediate frame" never round-trips through HBM.
+    """
+    from ..parallel.sharding import DP, TP, hint
+
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if Sq == 1:
+        return attention_decode(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, mixer=mixer, causal=causal,
+            window=window, chunk=chunk, kv_len=kv_len, logit_cap=logit_cap,
+            seq_sharded=seq_sharded,
+        )
+    if Skv % kv_block:
+        kv_block = Skv  # degenerate single block (small/test shapes)
+    n_blocks = Skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    qh = hint(q.astype(jnp.float32), DP, None, TP, None)
+
+    kb = k.reshape(B, n_blocks, kv_block, KV, hd)
+    vb = v.reshape(B, n_blocks, kv_block, KV, hd)
+    pb = kv_pos.reshape(n_blocks, kv_block)
+
+    def step(carry, xs):
+        m, l, acc = carry  # (B,H,Sq), (B,H,Sq), (B,H,Sq,hd)
+        k_c, v_c, p_c = xs
+        k_r = hint(repeat_kv(k_c, H).astype(jnp.float32), DP, None, TP, None)
+        v_r = hint(repeat_kv(v_c, H).astype(jnp.float32), DP, None, TP, None)
+        s = jnp.einsum("bqhd,bchd->bhqc", qh, k_r) * scale
+        s = hint(softcap(s, logit_cap), DP, TP, None, None)
+        bias = attention_bias(
+            q_pos, p_c, mixer=mixer, causal=causal, window=window, chunk=chunk,
+            kv_len=kv_len,
+        )
+        s = s + bias[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqc,bchd->bhqd", p, v_r)
+        return (m_new, l_new, acc_new), None
+
+    m0 = hint(jnp.full((B, H, Sq), NEG_INF, jnp.float32), DP, TP, None)
+    l0 = jnp.zeros_like(m0)
+    acc0 = hint(jnp.zeros((B, H, Sq, hd), jnp.float32), DP, TP, None, None)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            pb,
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 1, 2)  # (B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention module (projections + rope + qk-norm + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def attention_block(
+    params: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    *,
+    mixer: str,
+    positions: jnp.ndarray,  # (S,) absolute positions of x
+    cache: dict | None = None,  # {"k","v": (B, max_seq, KV, hd), "len": ()}
+    cross_kv: tuple | None = None,  # encoder (k, v) for cross-attention
+    causal: bool = True,
+    impl: str = "chunked",
+    kv_block: int = 1024,
+    rope: bool = True,
+    seq_sharded: bool = False,
+    ring: bool = False,  # cache buffer is a window-sized ring (attn_local)
+    flash_vjp: bool = False,  # custom-vjp flash for the no-cache path
+    bf16_tiles: bool = False,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Self- (or cross-) attention sub-layer.  Returns (out, new_cache)."""
+    from ..parallel.sharding import DP, TP, hint
+
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    # Sharding hints: GSPMD cannot infer head-axis sharding through the
+    # (H*hd) -> (H, hd) split; pin q heads on TP (k/v stay KV-small and
+    # TP-replicated — the flash path repeats them per chunk, locally).
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    if S > 1:
+        q = hint(q, DP, None, TP, None)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(B, S, KV, hd)
+        v = (x @ params["wv"]).reshape(B, S, KV, hd)
+        if S > 1:
+            k = hint(k, DP, None, None, None)
+            v = hint(v, DP, None, None, None)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.rmsnorm_eps)
+        if cross_kv is None:
+            k = rmsnorm(params["k_norm"], k, cfg.rmsnorm_eps)
+
+    if rope and cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cross_kv is not None:
+        kv_pos = jnp.arange(k.shape[1])
+        kv_len = None
+        causal = False
+    elif cache is not None and ring:
+        # Window-sized ring buffer (local-attention layers): slots keyed by
+        # position % W.  Decode attends to the ring; prefill attends to the
+        # full fresh sequence and persists only the last window.
+        start = cache["len"]
+        k_ring = ring_insert(cache["k"], k, start)
+        v_ring = ring_insert(cache["v"], v, start)
+        new_cache = {"k": k_ring, "v": v_ring}
+        if S == 1:
+            k, v = k_ring, v_ring
+            kv_pos = ring_positions(k.shape[1], start)
+            kv_len = None  # validity from kp >= 0 + causal + window masks
+        else:
+            kv_pos = positions
+            kv_len = start + S
+    elif cache is not None:
+        # Decode / incremental: write k,v at [len, len+S) then attend to cache.
+        start = cache["len"]
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, start, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, start, 0, 0))
+        new_cache = {"k": k_all, "v": v_all, "len": start + S}
+        k, v = k_all, v_all
+        kv_pos = jnp.arange(k.shape[1])
+        kv_len = start + S
+    else:
+        kv_pos = positions
+        kv_len = None
+
+    if (flash_vjp and cache is None and cross_kv is None and S > 1
+            and cfg.logit_softcap == 0.0):
+        from .flash import flash_attention_vjp
+
+        out = flash_attention_vjp(
+            q, k, v, q_pos=positions, kv_pos=kv_pos, mixer=mixer,
+            window=cfg.window_size, chunk=cfg.chunk_size, kv_block=kv_block,
+            bf16_tiles=bf16_tiles,
+        )
+        return out.reshape(B, S, H * hd) @ params["wo"], None
+
+    fn = attention_reference if impl == "reference" else attention_chunked
+    kwargs = dict(
+        q_pos=positions,
+        kv_pos=kv_pos,
+        mixer=mixer,
+        causal=causal,
+        window=cfg.window_size,
+        chunk=cfg.chunk_size,
+        kv_len=kv_len,
+        logit_cap=cfg.logit_softcap,
+    )
+    if impl != "reference":
+        kwargs["kv_block"] = kv_block
+        kwargs["seq_sharded"] = seq_sharded
+    out = fn(q, k, v, **kwargs)
+    out = out.reshape(B, S, H * hd) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, d_ff, dtype), "w2": dense_init(ks[1], d_ff, d, dtype)}
+    if act in GATED_ACTS:
+        p["w3"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_block(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ params["w1"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ params["w3"])
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x @ params["w3"])
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(act)
+    return h @ params["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (vocab logits never fully materialised)
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(
+    h: jnp.ndarray,  # (B, S, d) final hidden states
+    lm_head: jnp.ndarray,  # (d, V)
+    labels: jnp.ndarray,  # (B, S) int32
+    *,
+    chunk: int = 512,
+    mask: jnp.ndarray | None = None,  # (B, S) bool, True = count
+) -> jnp.ndarray:
+    """Mean next-token NLL computed over sequence chunks.
+
+    The (B, S, V) logits tensor (423 GB for llama4's train_4k cell) is the
+    "intermediate frame" here; chunking the projection+logsumexp into one
+    fusion group keeps only (B, chunk, V) live.
+    """
+    B, S, d = h.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, d).swapaxes(0, 1)  # (n, B, chunk, d)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = (
+        jnp.ones((n, B, chunk), bool)
+        if mask is None
+        else mask.reshape(B, n, chunk).swapaxes(0, 1)
+    )
+
+    @jax.checkpoint  # recompute (B, chunk, V) logits in backward: never stored
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        logits = (hc @ lm_head).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mc, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.int32(0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1)

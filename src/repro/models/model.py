@@ -1,0 +1,78 @@
+"""Model dispatch: one API over decoder-only, encoder-decoder and VGG.
+
+``init_params / forward / loss_fn / init_cache / prefill / decode`` all
+dispatch on the config; launch scripts and tests only import this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as ED
+from . import layers as L
+from . import transformer as T
+
+
+def init_params(key, cfg) -> dict:
+    if cfg.is_encoder_decoder:
+        return ED.init_params(key, cfg)
+    return T.init_params(key, cfg)
+
+
+def abstract_params(cfg):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def forward(params, cfg, rc, batch: dict, cache=None):
+    if cfg.is_encoder_decoder:
+        return ED.forward(params, cfg, rc, batch, cache)
+    return T.forward(params, cfg, rc, batch, cache)
+
+
+def loss_fn(params, cfg, rc, batch: dict):
+    if not cfg.is_encoder_decoder:
+        return T.loss_fn(params, cfg, rc, batch)
+    h, _, aux = ED.forward(params, cfg, rc, batch)
+    labels = batch["labels"]
+    mask = labels >= 0
+    nll = L.chunked_cross_entropy(
+        h, params["embed"].T, jnp.maximum(labels, 0), chunk=rc.xent_chunk, mask=mask
+    )
+    return nll, {"nll": nll, "aux": aux}
+
+
+def init_cache(cfg, batch: int, max_seq: int, *, ring: bool = False):
+    if cfg.is_encoder_decoder:
+        return ED.init_cache(cfg, batch, max_seq, cfg.frontend_len)
+    return T.init_cache(cfg, batch, max_seq, ring=ring)
+
+
+def abstract_cache(cfg, batch: int, max_seq: int, *, ring: bool = False):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, ring=ring))
+
+
+def prefill(params, cfg, rc, batch: dict, cache):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B, 1, V), new_cache).
+    """
+    h, new_cache, _ = forward(params, cfg, rc, batch, cache)
+    logits = h[:, -1:, :] @ _head(params, cfg)
+    return logits.astype(jnp.float32), new_cache
+
+
+def decode(params, cfg, rc, tokens: jnp.ndarray, cache, extras: dict | None = None):
+    """One decode step.  tokens: (B, 1).  Returns (logits (B,1,V), cache)."""
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    h, new_cache, _ = forward(params, cfg, rc, batch, cache)
+    logits = h[:, -1:, :] @ _head(params, cfg)
+    return logits.astype(jnp.float32), new_cache
+
+
+def _head(params, cfg):
+    if cfg.is_encoder_decoder:
+        return params["embed"].T
+    return T.lm_head_matrix(params, cfg)

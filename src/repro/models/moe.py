@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with GShard-style group-limited capacity routing.
+
+Design notes (why this shape of MoE):
+
+* Routing is **capacity-based with token groups** (GShard / Switch): tokens
+  are reshaped to ``(groups, group_size)`` and each group independently
+  dispatches to per-expert capacity slots.  The dispatch/combine one-hots
+  are ``(G, Sg, E, C)`` with ``C = ceil(top_k * Sg / E * capacity_factor)``;
+  with the default ``group_size=512`` the dispatch einsum FLOPs stay <10 %
+  of the expert-FFN FLOPs at every assigned shape (llama4 train_4k: 8.5 %),
+  which keeps the roofline "useful-FLOPs" ratio honest.
+* Under GSPMD the group axis shards over ``data`` and the expert axis over
+  ``model`` (expert parallelism); the dispatch einsum's ``e`` output axis
+  moving onto ``model`` is what induces the all-to-all in the compiled HLO.
+* Over-capacity tokens are dropped (combine weight 0) — standard; the
+  aux load-balance loss pushes the router away from that regime.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * scale).astype(
+            jnp.float32
+        ),  # router kept fp32 (tiny; routing is precision-sensitive)
+        "w1": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "w2": (
+            jax.random.normal(ks[2], (E, ff, d), jnp.float32) / math.sqrt(ff)
+        ).astype(dtype),
+    }
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        p["w3"] = (jax.random.normal(ks[3], (E, d, ff), jnp.float32) * scale).astype(
+            dtype
+        )
+    if cfg.dense_residual_ff:
+        from .layers import init_mlp
+
+        p["dense_residual"] = init_mlp(ks[4], d, cfg.dense_residual_ff, cfg.ffn_act, dtype)
+    return p
+
+
+def _capacity(cfg, group_size: int) -> int:
+    c = math.ceil(cfg.top_k * group_size / cfg.n_experts * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def route_topk(router_logits: jnp.ndarray, top_k: int):
+    """(..., E) logits -> (gates, indices) each (..., top_k); gates sum to 1."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_block(params: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE FFN.  x: (B, S, d) -> (y, aux_loss)."""
+    from ..parallel.sharding import DP, TP, hint
+
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    Sg = min(cfg.moe_group_size, T)
+    G = T // Sg
+    assert G * Sg == T, f"tokens {T} not divisible by group size {Sg}"
+    xg = hint(x.reshape(G, Sg, d), DP, None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"])
+    gates, idx, probs = route_topk(logits, K)  # (G, Sg, K)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1))  # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    fe = onehot_top1.mean(axis=(0, 1))
+    aux = E * jnp.sum(fe * me)
+
+    C = _capacity(cfg, Sg)
+    # Position of each (token, k) claim within its expert's capacity.
+    # claims: (G, Sg, K, E) one-hot; flatten (Sg, K) in token-major order so
+    # earlier tokens (and lower k) win capacity slots.  One-hots are built in
+    # the compute dtype (bf16 represents the small integers exactly) — the
+    # (G, Sg, K, E, C) transient halves, the dominant MoE-cell temp buffer.
+    dt = x.dtype
+    claims = jax.nn.one_hot(idx, E, dtype=dt)  # (G, Sg, K, E)
+    flat = claims.reshape(G, Sg * K, E)
+    pos = jnp.cumsum(flat.astype(jnp.float32), axis=1).astype(dt) - flat
+    keep = jnp.where(pos < C, flat, jnp.zeros((), dt))  # (G, Sg*K, E)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=dt) * keep[..., None]
+    disp_flat = pos_oh.reshape(G, Sg, K, E, C)
+
+    dispatch = disp_flat.sum(axis=2)  # (G, Sg, E, C)  (a token claims <=1 slot/expert)
+    dispatch = hint(dispatch, DP, None, TP, None)
+    combine = hint(
+        jnp.einsum("gskec,gsk->gsec", disp_flat, gates.astype(dt)), DP, None, TP, None
+    )
+
+    dt = x.dtype
+    # Dispatch: the e axis landing on TP is the expert-parallel all-to-all.
+    xe = hint(jnp.einsum("gsec,gsd->gecd", dispatch.astype(dt), xg), DP, TP, None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w1"])
+    if cfg.ffn_act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    elif cfg.ffn_act == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    elif cfg.ffn_act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    ye = hint(jnp.einsum("gecf,efd->gecd", h, params["w2"]), DP, TP, None, None)
+    y = hint(jnp.einsum("gsec,gecd->gsd", combine.astype(dt), ye), DP, None, None)
+
+    if "dense_residual" in params:  # arctic: parallel dense MLP
+        from .layers import mlp_block
+
+        y = y + mlp_block(params["dense_residual"], xg, cfg.ffn_act)
+
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,161 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba-7b, jamba).
+
+The selective scan is evaluated **chunk-recurrently**: an outer
+``lax.scan`` over sequence chunks carries the (B, d_inner, d_state) SSM
+state; inside a chunk the recurrence runs as a parallel
+``associative_scan``.  This is the paper's fusion idea applied to a
+recurrence: the (B, S, d_inner, d_state) discretised-transition tensor —
+128x the activation size for falcon-mamba — only ever exists one chunk at
+a time (HBM traffic drops by S/chunk), exactly like a fusion group's
+intermediate frame staying in SRAM.  ``repro.kernels.mamba_scan`` is the
+Pallas version; ``selective_scan_reference`` (plain sequential scan) is
+the oracle.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dr, dc = cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    # A initialised to -[1..ds] per channel (S4D-real), stored as log.
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(
+        jnp.exp(
+            jnp.clip(
+                jax.random.uniform(ks[0], (di,), jnp.float32) * (0.1 - 1e-3) + 1e-3,
+                1e-4,
+            )
+        )
+        - 1.0
+    )  # softplus^-1 of dt in [1e-3, 0.1]
+    return {
+        "in_proj": dense_init(ks[1], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (dc, di), jnp.float32) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], di, dr + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[4], dr, di, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a_init),  # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                          state: jnp.ndarray | None = None):
+    """x: (B, S, di); w: (dc, di).  Returns (y, new_state (B, dc-1, di))."""
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+dc-1, di)
+    S = x.shape[1]
+    y = sum(xp[:, j : j + S, :] * w[j][None, None, :] for j in range(dc))
+    new_state = xp[:, -(dc - 1) :, :] if dc > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def _ssm_inputs(params, x_c: jnp.ndarray, cfg):
+    """Discretised (dA, dBx, C) from the conv output.  All fp32."""
+    dr, ds = cfg.dt_rank, cfg.ssm_state
+    proj = (x_c @ params["x_proj"]).astype(jnp.float32)  # (B,S,dr+2ds)
+    dt_low, Bs, Cs = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dt_low @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"]
+    )  # (B,S,di)
+    A = -jnp.exp(params["A_log"])  # (di, ds)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B,S,di,ds)
+    dBx = dt[..., None] * Bs[:, :, None, :] * x_c.astype(jnp.float32)[..., None]
+    return dA, dBx, Cs
+
+
+def selective_scan_reference(dA, dBx, Cs, h0=None):
+    """Sequential oracle.  dA,dBx: (B,S,di,ds); Cs: (B,S,ds) -> y (B,S,di)."""
+    B, S, di, ds = dA.shape
+    h = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        a, bx, c = xs
+        h = a * h + bx
+        return h, jnp.einsum("bds,bs->bd", h, c)
+
+    h, ys = jax.lax.scan(
+        step, h, (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(Cs, 1, 0))
+    )
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def selective_scan_chunked(dA, dBx, Cs, h0=None, chunk: int = 256):
+    """Chunk-recurrent parallel scan (the fused-layer execution)."""
+    B, S, di, ds = dA.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    h = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0
+    dAc = dA.reshape(B, n, chunk, di, ds).swapaxes(0, 1)
+    dBc = dBx.reshape(B, n, chunk, di, ds).swapaxes(0, 1)
+    Cc = Cs.reshape(B, n, chunk, ds).swapaxes(0, 1)
+
+    def step(h, xs):
+        a, bx, c = xs  # (B, chunk, di, ds), ..., (B, chunk, ds)
+        # h_t = (prod a)(h_in) + scan(b); fold h_in in via the first b term.
+        bx0 = bx.at[:, 0].add(a[:, 0] * h)
+        a_cum, h_all = jax.lax.associative_scan(_assoc_combine, (a, bx0), axis=1)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, c)
+        return h_all[:, -1], y
+
+    h, ys = jax.lax.scan(step, h, (dAc, dBc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    return y, h
+
+
+def mamba_block(
+    params: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    cache: dict | None = None,  # {"conv": (B, dc-1, di), "h": (B, di, ds)}
+    *,
+    chunk: int = 256,
+    impl: str = "chunked",
+) -> tuple[jnp.ndarray, dict | None]:
+    B, S, d = x.shape
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    x_c, new_conv = causal_depthwise_conv(x_in, params["conv_w"], params["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    dA, dBx, Cs = _ssm_inputs(params, x_c, cfg)
+    h0 = cache["h"] if cache is not None else None
+    if impl == "reference" or S == 1:
+        y, h = selective_scan_reference(dA, dBx, Cs, h0)
+    else:
+        y, h = selective_scan_chunked(dA, dBx, Cs, h0, chunk=chunk)
+
+    y = y + params["D"][None, None, :] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_cache = {"conv": new_conv, "h": h} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,276 @@
+"""Decoder-only transformer trunk with heterogeneous layer stacks.
+
+A model is a sequence of **segments**; each segment is ``repeats`` copies of
+a *superblock* (one period of the config's cyclic ``layer_pattern`` x MoE
+placement), with parameters stacked on a leading ``repeats`` axis and the
+stack executed by ``jax.lax.scan``.  One trace per distinct superblock keeps
+compile time flat in depth (granite's 88 layers trace once), which is what
+makes the 40-cell x 512-device dry-run tractable.
+
+Supported sublayer mixers: full/sliding-window/chunked attention and
+Mamba-1; FFN is dense or MoE (with arctic's parallel dense-residual).  The
+same trunk serves training (no cache), prefill (cache write) and decode
+(cache read-extend) — jamba/gemma3/llama4/falcon-mamba all route through
+here; seamless adds an encoder via :mod:`repro.models.encdec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    start_layer: int
+    repeats: int
+    kinds: tuple[tuple[str, bool], ...]  # (mixer, is_moe) per sublayer
+
+
+def segments_of(cfg, n_layers: int | None = None) -> list[SegmentSpec]:
+    n = cfg.n_layers if n_layers is None else n_layers
+    P = cfg.pattern_period
+    segs: list[SegmentSpec] = []
+    n_full, rem = divmod(n, P)
+    if n_full:
+        segs.append(SegmentSpec(0, n_full, cfg.sublayer_kinds(0, P)))
+    if rem:
+        segs.append(SegmentSpec(n_full * P, 1, cfg.sublayer_kinds(n_full * P, rem)))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg, mixer: str, is_moe: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    sub: dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+                           "norm2": L.rmsnorm_init(cfg.d_model, dtype)}
+    if mixer == "mamba":
+        sub["mamba"] = SSM.init_mamba(k1, cfg, dtype)
+    else:
+        sub["attn"] = L.init_attention(k1, cfg, dtype)
+    if is_moe:
+        sub["moe"] = MOE.init_moe(k2, cfg, dtype)
+    elif cfg.d_ff > 0:
+        sub["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+    else:
+        del sub["norm2"]  # mamba-1 blocks: mixer only, no FFN sublayer
+    return sub
+
+
+def init_segment(key, cfg, spec: SegmentSpec, dtype) -> dict:
+    def one(k):
+        ks = jax.random.split(k, len(spec.kinds))
+        return {
+            f"sub{j}": _init_sublayer(ks[j], cfg, m, e, dtype)
+            for j, (m, e) in enumerate(spec.kinds)
+        }
+
+    keys = jax.random.split(key, spec.repeats)
+    return jax.vmap(one)(keys)
+
+
+def init_params(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "segments": [
+            init_segment(k, cfg, spec, dtype)
+            for k, spec in zip(
+                jax.random.split(ks[1], max(len(segments_of(cfg)), 1)), segments_of(cfg)
+            )
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_seq: int, n_layers: int | None = None,
+               *, ring: bool = False) -> dict:
+    """Decode cache pytree matching the segment structure.
+
+    ``ring=True``: local-attention sublayers get a window-sized ring buffer
+    instead of a full-context one (the §Perf decode lever — gemma3's 51/62
+    local layers hold 1024 entries instead of 32k/500k).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    segs = []
+    for spec in segments_of(cfg, n_layers):
+        seg: dict[str, Any] = {}
+        for j, (mixer, _) in enumerate(spec.kinds):
+            if mixer == "mamba":
+                seg[f"sub{j}"] = {
+                    "conv": jnp.zeros(
+                        (spec.repeats, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype
+                    ),
+                    "h": jnp.zeros(
+                        (spec.repeats, batch, cfg.d_inner, cfg.ssm_state), jnp.float32
+                    ),
+                }
+            else:
+                entries = max_seq
+                if ring and mixer == "attn_local":
+                    entries = min(max_seq, cfg.window_size)
+                seg[f"sub{j}"] = {
+                    "k": jnp.zeros((spec.repeats, batch, entries, cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((spec.repeats, batch, entries, cfg.n_kv_heads, hd), dtype),
+                }
+        segs.append(seg)
+    return {"segments": segs, "len": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _sublayer(sub, x, cfg, rc, mixer, is_moe, positions, cache, cache_len, aux):
+    """One (mixer + FFN) sublayer.  Returns (x, new_cache, aux)."""
+    h = L.rmsnorm(sub["norm1"], x, cfg.rmsnorm_eps)
+    new_cache = None
+    if mixer == "mamba":
+        out, new_cache = SSM.mamba_block(
+            sub["mamba"], h, cfg, cache, chunk=rc.mamba_chunk,
+            impl="chunked",
+        )
+    else:
+        attn_cache = None
+        if cache is not None:
+            attn_cache = {"k": cache["k"], "v": cache["v"], "len": cache_len}
+        out, nc = L.attention_block(
+            sub["attn"], h, cfg,
+            mixer=mixer, positions=positions, cache=attn_cache,
+            impl="chunked", kv_block=rc.attn_chunk_kv, seq_sharded=rc.seq_shard,
+            ring=(rc.local_ring_cache and mixer == "attn_local"),
+            flash_vjp=rc.flash_vjp, bf16_tiles=rc.attn_bf16_tiles,
+        )
+        if nc is not None:
+            new_cache = {"k": nc["k"], "v": nc["v"]}
+    x = x + out
+    if "norm2" not in sub:  # FFN-free block (mamba-1)
+        return x, new_cache, aux
+    h = L.rmsnorm(sub["norm2"], x, cfg.rmsnorm_eps)
+    if is_moe:
+        out, a = MOE.moe_block(sub["moe"], h, cfg)
+        aux = aux + a
+    else:
+        out = L.mlp_block(sub["mlp"], h, cfg.ffn_act)
+    return x + out, new_cache, aux
+
+
+def _remat_wrap(fn, rc):
+    if rc.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_saveable
+        if rc.remat == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def run_segment(seg_params, x, cfg, rc, spec: SegmentSpec, *, positions,
+                seg_cache=None, cache_len=None, aux):
+    """Scan ``spec.repeats`` superblocks.  Returns (x, new_seg_cache, aux)."""
+    has_cache = seg_cache is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        p = xs[0] if has_cache else xs
+        c = xs[1] if has_cache else None
+        new_c = {}
+        for j, (mixer, is_moe) in enumerate(spec.kinds):
+            sub_cache = c[f"sub{j}"] if c is not None else None
+            x, nc, aux = _sublayer(
+                p[f"sub{j}"], x, cfg, rc, mixer, is_moe, positions,
+                sub_cache, cache_len, aux,
+            )
+            if nc is not None:
+                new_c[f"sub{j}"] = nc
+        return (x, aux), (new_c if has_cache else None)
+
+    body = _remat_wrap(body, rc)
+    xs = (seg_params, seg_cache) if has_cache else seg_params
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux), xs)
+    return x, new_cache, aux
+
+
+def embed_inputs(params, cfg, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Token (+ frontend stub) embedding.  Returns (x, positions)."""
+    from ..parallel.sharding import DP, hint
+
+    tok_emb = params["embed"][batch["tokens"]]  # (B, S_tok, d)
+    if cfg.frontend and "frontend" in batch:
+        x = jnp.concatenate([batch["frontend"].astype(tok_emb.dtype), tok_emb], axis=1)
+    else:
+        x = tok_emb
+    positions = jnp.arange(x.shape[1])
+    return hint(x, DP, None, None), positions
+
+
+def forward(params, cfg, rc, batch: dict, cache: dict | None = None):
+    """Trunk forward.  batch: {"tokens": (B,S), ["frontend": (B,Lf,d)]}.
+
+    With ``cache``: incremental (prefill writes at [len, len+S), decode
+    extends); positions are offset by ``cache["len"]``.
+    Returns (hidden (B,S,d), new_cache|None, aux_loss).
+    """
+    x, positions = embed_inputs(params, cfg, batch)
+    cache_len = cache["len"] if cache is not None else None
+    if cache is not None:
+        positions = positions + cache_len
+    aux = jnp.float32(0.0)
+    new_segs = []
+    for i, spec in enumerate(segments_of(cfg)):
+        seg_cache = cache["segments"][i] if cache is not None else None
+        x, new_seg, aux = run_segment(
+            params["segments"][i], x, cfg, rc, spec,
+            positions=positions, seg_cache=seg_cache, cache_len=cache_len, aux=aux,
+        )
+        new_segs.append(new_seg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"segments": new_segs, "len": cache_len + x.shape[1]}
+    return x, new_cache, aux
+
+
+def lm_head_matrix(params, cfg) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(params, cfg, rc, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """Next-token NLL (+ MoE aux).  Labels < 0 are ignored."""
+    h, _, aux = forward(params, cfg, rc, batch)
+    labels = batch["labels"]
+    mask = labels >= 0
+    nll = L.chunked_cross_entropy(
+        h, lm_head_matrix(params, cfg), jnp.maximum(labels, 0),
+        chunk=rc.xent_chunk, mask=mask,
+    )
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def logits_last(params, cfg, rc, h: jnp.ndarray) -> jnp.ndarray:
+    """Logits of the final position only (serving)."""
+    return (h[:, -1:, :] @ lm_head_matrix(params, cfg)).astype(jnp.float32)

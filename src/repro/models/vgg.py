@@ -1,0 +1,79 @@
+"""VGG-16 in JAX — the paper's own Sec. III workload, runnable end to end.
+
+Used by the quickstart example (train on synthetic 32x32 data), by the
+fused-conv Pallas kernel tests, and to cross-check the evaluator's layer IR
+(``repro.core.ir.vgg16_ir``) against real tensor shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ir import VGG16_CONV_PLAN
+
+
+def init_params(key, *, in_hw: int = 224, n_classes: int = 1000,
+                dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(VGG16_CONV_PLAN) + 3)
+    convs = []
+    for k, (name, n_in, n_out, hw, pooled) in zip(ks, VGG16_CONV_PLAN):
+        w = jax.random.normal(k, (3, 3, n_in, n_out), jnp.float32)
+        w = w * (2.0 / (9 * n_in)) ** 0.5  # He init
+        convs.append({"w": w.astype(dtype), "b": jnp.zeros((n_out,), dtype)})
+    # Spatial size after 5 pools.
+    s = in_hw // 32
+    k1, k2, k3 = ks[-3:]
+    fcs = [
+        {"w": (jax.random.normal(k1, (512 * s * s, 4096)) * 0.01).astype(dtype),
+         "b": jnp.zeros((4096,), dtype)},
+        {"w": (jax.random.normal(k2, (4096, 4096)) * 0.01).astype(dtype),
+         "b": jnp.zeros((4096,), dtype)},
+        {"w": (jax.random.normal(k3, (4096, n_classes)) * 0.01).astype(dtype),
+         "b": jnp.zeros((n_classes,), dtype)},
+    ]
+    return {"convs": convs, "fcs": fcs}
+
+
+def max_pool_2x2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def conv_bn_relu(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def forward(params: dict, x: jnp.ndarray, *, fused_conv_fn=None) -> jnp.ndarray:
+    """x: (B, H, W, 3) -> logits (B, n_classes).
+
+    ``fused_conv_fn(x, w, b, pool)`` — optional fused conv+relu(+pool)
+    implementation (the Pallas kernel); defaults to the XLA ops.
+    """
+    ci = 0
+    for name, n_in, n_out, hw, pooled in VGG16_CONV_PLAN:
+        p = params["convs"][ci]
+        if fused_conv_fn is not None:
+            x = fused_conv_fn(x, p["w"], p["b"], pool=pooled)
+        else:
+            x = conv_bn_relu(x, p)
+            if pooled:
+                x = max_pool_2x2(x)
+        ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fcs"]):
+        x = x @ p["w"] + p["b"]
+        if i < 2:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params: dict, batch: dict, *, fused_conv_fn=None) -> jnp.ndarray:
+    logits = forward(params, batch["images"], fused_conv_fn=fused_conv_fn)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    gold = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    return -gold.mean()

@@ -1,0 +1,3 @@
+"""Optimizer substrate (AdamW + schedules), no external dependencies."""
+from .adamw import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

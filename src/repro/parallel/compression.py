@@ -1,0 +1,58 @@
+"""Gradient compression for the slow cross-pod link (int8 + error feedback).
+
+At 2 pods the inter-pod all-reduce carries the full gradient every step
+over the slowest links in the system.  ``compressed_psum`` quantises each
+tensor to int8 with a shared power-of-two-free scale, all-reduces the int8
+payload (1 byte/element on the wire instead of 4/2), and de-quantises; the
+quantisation residual is fed back into the next step's gradient (error
+feedback), which keeps SGD/Adam convergence (Karimireddy et al., 2019).
+
+Overflow note: an int8 all-reduce saturates if the summed magnitudes
+exceed 127, so the scale is chosen for the *sum* across the axis
+(pre-scaled by 1/n); with n=2 pods this costs 1 bit of precision — error
+feedback absorbs it.  Used inside shard_map (explicit axis), see
+runtime/spmd_train.make_compressed_grad_sync.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, n_summands: int = 1):
+    """-> (q int8, scale f32).  Scale sized so an n-way sum cannot saturate."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax * n_summands, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, *, mean: bool = True):
+    """int8 all-reduce of ``x`` over ``axis_name`` (inside shard_map).
+
+    Returns (reduced f32, local quantisation error for feedback).
+    """
+    n = jax.lax.psum(1, axis_name)
+    # Shared scale: every participant must use the same scale or the int8
+    # sum is meaningless -> take the max scale across the axis first
+    # (a scalar collective, 4 bytes).
+    q_local, scale_local = quantize_int8(x, n_summands=1)
+    scale = jax.lax.pmax(scale_local * 1, axis_name) * n  # headroom for sum
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    err = x.astype(jnp.float32) - q.astype(jnp.float32) * scale
+    summed = jax.lax.psum(q.astype(jnp.int8), axis_name)  # 1 B/elem on wire
+    out = summed.astype(jnp.float32) * scale
+    if mean:
+        out = out / n
+    return out, err
+
+
+def ef_apply(grads, errors):
+    """Add carried error feedback into this step's gradients."""
+    if errors is None:
+        return grads
+    return jax.tree.map(lambda g, e: g + e.astype(g.dtype), grads, errors)

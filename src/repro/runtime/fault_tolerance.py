@@ -1,0 +1,151 @@
+"""Fault-tolerant training driver: restore-on-failure, straggler
+mitigation, heartbeats.
+
+At thousands of nodes the mean time between failures drops below the
+checkpoint interval, so the driver — not the operator — must own recovery:
+
+* **Checkpoint/restart**: periodic async checkpoints (atomic + hashed, see
+  repro.checkpoint); on any step failure the driver restores the latest
+  good step and replays forward.  The counter-based data pipeline makes
+  the replay bit-identical.
+* **Straggler mitigation**: per-step wall-time deadline at ``k x`` the
+  running median; a step breaching it is recorded and *re-dispatched*
+  deterministically (same batch, same RNG) — the single-process analogue
+  of re-scheduling a slow worker's shard.
+* **Heartbeat**: a monotonically-increasing (step, time) file others can
+  watch; doubles as the liveness signal a cluster supervisor would use.
+
+Failure injection for tests/examples is a callable hook — a real cluster
+would raise from the collective layer instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+from .. import checkpoint as CKPT
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    stragglers: int = 0
+    redispatches: int = 0
+    last_loss: float = float("nan")
+    losses: list = dataclasses.field(default_factory=list)
+
+
+class ResilientTrainer:
+    def __init__(
+        self,
+        *,
+        train_step: Callable,  # (params, opt_state, batch) -> (p, o, metrics)
+        stream,  # repro.data.TokenStream
+        ckpt_dir,
+        ckpt_every: int = 10,
+        straggler_factor: float = 3.0,
+        min_deadline_s: float = 0.05,
+        failure_hook: Callable[[int], None] | None = None,
+    ):
+        self.train_step = train_step
+        self.stream = stream
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.min_deadline_s = min_deadline_s
+        self.failure_hook = failure_hook
+        self.checkpointer = CKPT.AsyncCheckpointer(ckpt_dir)
+        self.report = TrainerReport()
+        self._durations: list[float] = []
+
+    # ------------------------------------------------------------------
+    def _heartbeat(self, step: int):
+        hb = self.ckpt_dir / "heartbeat.json"
+        self.ckpt_dir.mkdir(parents=True, exist_ok=True)
+        hb.write_text(json.dumps({"step": step, "time": time.time()}))
+
+    def _restore(self, params, opt_state):
+        self.checkpointer.wait()  # an in-flight save may be the latest good step
+        step = CKPT.latest_step(self.ckpt_dir)
+        self.report.restores += 1
+        if step is None:
+            return 0, params, opt_state  # cold restart
+        tree, extra = CKPT.restore(
+            self.ckpt_dir, step, like={"params": params, "opt": opt_state}
+        )
+        params = jax.tree.map(jax.numpy.asarray, tree["params"])
+        opt_state = jax.tree.map(jax.numpy.asarray, tree["opt"])
+        return step + 1, params, opt_state
+
+    def _run_one(self, params, opt_state, step: int, batch):
+        if self.failure_hook is not None:
+            self.failure_hook(step)  # may raise (simulated node failure)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = self.train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        return params, opt_state, metrics, dt
+
+    # ------------------------------------------------------------------
+    def run(self, params, opt_state, n_steps: int, *, start_step: int = 0):
+        step = start_step
+        while step < start_step + n_steps:
+            batch = self.stream.batch_at(step)
+            try:
+                params, opt_state, metrics, dt = self._run_one(
+                    params, opt_state, step, batch
+                )
+            except Exception:
+                self.report.failures += 1
+                step, params, opt_state = self._restore(params, opt_state)
+                continue
+
+            # Straggler detection + deterministic re-dispatch.
+            if len(self._durations) >= 5:
+                deadline = max(
+                    self.min_deadline_s,
+                    self.straggler_factor * statistics.median(self._durations),
+                )
+                if dt > deadline:
+                    self.report.stragglers += 1
+                    params, opt_state, metrics, dt = self._run_one(
+                        params, opt_state, step, batch
+                    )
+                    self.report.redispatches += 1
+            self._durations.append(dt)
+            if len(self._durations) > 50:
+                self._durations.pop(0)
+
+            loss = float(metrics["loss"])
+            self.report.steps_run += 1
+            self.report.last_loss = loss
+            self.report.losses.append(loss)
+            self._heartbeat(step)
+            if (step + 1) % self.ckpt_every == 0:
+                self.checkpointer.submit(
+                    step, {"params": params, "opt": opt_state},
+                    extra={"loss": loss},
+                )
+            step += 1
+        self.checkpointer.wait()
+        return params, opt_state
+
+
+def flaky(fail_at_steps: set[int], *, already: set | None = None):
+    """Failure hook raising once per listed step (then healing)."""
+    seen = already if already is not None else set()
+
+    def hook(step: int):
+        if step in fail_at_steps and step not in seen:
+            seen.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+    return hook

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device tests spawn subprocesses with their own flags."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig
+
+
+@pytest.fixture(scope="session")
+def rc_small():
+    return RunConfig(xent_chunk=16, attn_chunk_kv=16, mamba_chunk=8,
+                     learning_rate=1e-3, warmup_steps=2)
+
+
+def tiny_config(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def tiny_dense():
+    return tiny_config()

@@ -1,0 +1,70 @@
+"""Fusion-grouping search: DP vs brute force, feasibility, cut encodings."""
+import numpy as np
+import pytest
+
+from repro.core import fusion, metrics as M
+from repro.core.ir import LayerSpec, NetworkIR, vgg16_ir
+
+
+def random_chain(rng, n):
+    layers = []
+    c = int(rng.choice([4, 8]))
+    hw = 16
+    for i in range(n):
+        cout = int(rng.choice([4, 8, 16]))
+        layers.append(LayerSpec(f"l{i}", "conv", c, cout, hw, hw, 3, 3, 1))
+        c = cout
+    return NetworkIR("rand", tuple(layers))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dp_matches_bruteforce_unconstrained(seed):
+    rng = np.random.default_rng(seed)
+    ir = random_chain(rng, int(rng.integers(3, 9)))
+    dp = fusion.optimal_cuts_dp(ir)
+    bf = fusion.brute_force_min_bw(ir)
+    assert dp.group_cost_words == pytest.approx(bf.group_cost_words)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dp_matches_bruteforce_with_sram_budget(seed):
+    rng = np.random.default_rng(100 + seed)
+    ir = random_chain(rng, int(rng.integers(3, 9)))
+    budget = float(np.median([l.out_words for l in ir.layers]))
+    try:
+        dp = fusion.optimal_cuts_dp(ir, sram_budget_words=budget)
+    except ValueError:
+        with pytest.raises(ValueError):
+            fusion.brute_force_min_bw(ir, sram_budget_words=budget)
+        return
+    bf = fusion.brute_force_min_bw(ir, sram_budget_words=budget)
+    assert dp.group_cost_words == pytest.approx(bf.group_cost_words)
+    feat = ir.feature_matrix()
+    assert fusion.buffer_feasible(feat, dp.cuts, budget)
+
+
+def test_cuts_groups_roundtrip():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(2, 12))
+        cuts = rng.random(n - 1) < 0.5
+        groups = M.groups_from_cuts(cuts)
+        back = fusion.cuts_from_groups(groups, n)
+        np.testing.assert_array_equal(cuts, back)
+        assert sum(len(g) for g in groups) == n
+
+
+def test_pool_boundary_cuts_vgg():
+    ir = vgg16_ir(pool_mode="separate")
+    groups = M.groups_from_cuts(ir.pool_boundary_cuts())
+    # 5 stages, each ending with its pool layer
+    assert len(groups) == 5
+    for g in groups:
+        assert ir.layers[g[-1]].kind == "pool"
+
+
+def test_enumerate_cuts_count():
+    assert fusion.enumerate_cuts(5).shape == (16, 4)
+    assert fusion.enumerate_cuts(1).shape == (1, 0)
+    with pytest.raises(ValueError):
+        fusion.enumerate_cuts(40)

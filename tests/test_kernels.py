@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fused_attention, fused_conv, fused_mlp, mamba_scan, ref
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def tol(dtype):
+    return TOLS[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,hd", [
+    (1, 128, 128, 4, 4, 64),   # MHA
+    (2, 256, 256, 8, 2, 64),   # GQA 4:1
+    (1, 128, 256, 4, 1, 128),  # MQA, cross-length
+    (2, 384, 384, 6, 2, 32),   # non-pow2 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Sq, Skv, H, KV, hd, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (B, Sq, H, hd), dtype)
+    k = jax.random.normal(k2, (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(k3, (B, Skv, KV, hd), dtype)
+    out = fused_attention.flash_attention(q, k, v, block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=tol(dtype), rtol=tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("window,chunk", [(0, 0), (64, 0), (0, 128), (32, 0)])
+def test_flash_attention_masks(window, chunk):
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(k1, (2, 256, 4, 64))
+    k = jax.random.normal(k2, (2, 256, 2, 64))
+    v = jax.random.normal(k3, (2, 256, 2, 64))
+    out = fused_attention.flash_attention(q, k, v, window=window, chunk=chunk)
+    expect = ref.flash_attention_ref(q, k, v, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128), (128, 256)])
+def test_flash_attention_block_invariance(blocks):
+    bq, bk = blocks
+    k1, k2, k3 = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(k1, (1, 256, 2, 64))
+    k = jax.random.normal(k2, (1, 256, 2, 64))
+    v = jax.random.normal(k3, (1, 256, 2, 64))
+    base = fused_attention.flash_attention(q, k, v, block_q=128, block_k=128)
+    out = fused_attention.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=2e-5)
+
+
+@pytest.mark.parametrize("T,d,ff,act", [
+    (128, 64, 256, "swiglu"),
+    (256, 128, 512, "geglu"),
+    (128, 64, 128, "gelu"),
+    (384, 96, 384, "relu"),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_mlp_shapes(T, d, ff, act, dtype):
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (T, d), dtype)
+    w1 = (jax.random.normal(ks[1], (d, ff)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[2], (ff, d)) * 0.1).astype(dtype)
+    w3 = (jax.random.normal(ks[3], (d, ff)) * 0.1).astype(dtype)
+    out = fused_mlp.fused_mlp(x, w1, w2, w3, act=act, block_m=128, block_f=128)
+    expect = ref.fused_mlp_ref(x, w1, w2, w3, act=act)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=tol(dtype) * 10, rtol=tol(dtype) * 10,
+    )
+
+
+@pytest.mark.parametrize("B,H,W,Cin,Cout,pool", [
+    (1, 8, 8, 4, 8, False),
+    (2, 16, 16, 8, 16, True),
+    (1, 32, 32, 3, 8, True),
+    (2, 8, 8, 16, 32, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_conv_shapes(B, H, W, Cin, Cout, pool, dtype):
+    ks = jax.random.split(jax.random.key(4), 3)
+    x = jax.random.normal(ks[0], (B, H, W, Cin), dtype)
+    w = (jax.random.normal(ks[1], (3, 3, Cin, Cout)) * 0.2).astype(dtype)
+    b = jax.random.normal(ks[2], (Cout,), dtype)
+    out = fused_conv.fused_conv3x3(x, w, b, pool=pool, block_c=min(8, Cout))
+    expect = ref.fused_conv3x3_ref(x, w, b, pool=pool)
+    assert out.shape == expect.shape
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=tol(dtype) * 10, rtol=tol(dtype) * 10,
+    )
+
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,bd", [
+    (1, 64, 16, 4, 16, 16),
+    (2, 128, 32, 8, 32, 16),
+    (1, 64, 64, 16, 64, 32),
+])
+def test_mamba_scan_shapes(B, S, di, ds, chunk, bd):
+    ks = jax.random.split(jax.random.key(5), 3)
+    dA = jax.random.uniform(ks[0], (B, S, di, ds), minval=0.3, maxval=0.98)
+    dBx = jax.random.normal(ks[1], (B, S, di, ds)) * 0.1
+    C = jax.random.normal(ks[2], (B, S, ds))
+    out = mamba_scan.selective_scan(dA, dBx, C, chunk=chunk, block_d=bd)
+    expect = ref.selective_scan_ref(dA, dBx, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_vmem_budgets():
+    """Planner block choices must fit v5e VMEM (128 MiB, /4 headroom)."""
+    from repro.core.arch import TPU_V5E
+    from repro.core.planner import plan_model
+    from repro.configs import REGISTRY
+
+    for cfg in REGISTRY.values():
+        plan = plan_model(cfg, 4096)
+        assert plan.attn_vmem_bytes <= TPU_V5E.vmem_bytes // 4
+        assert plan.mlp_vmem_bytes <= TPU_V5E.vmem_bytes // 4
+        assert plan.attn_block_q % 128 == 0 and plan.attn_block_k % 128 == 0

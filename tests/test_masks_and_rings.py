@@ -1,0 +1,56 @@
+"""Hypothesis properties for attention masks and ring-buffer positions."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import attention_bias, ring_positions
+
+
+@given(st.integers(2, 48), st.integers(1, 32), st.integers(1, 16),
+       st.integers(2, 16))
+@settings(max_examples=60, deadline=None)
+def test_attention_bias_semantics(S, window, chunk, _):
+    """Causal ⊇ local ⊇ nothing; every unmasked (q,k) obeys its rule; each
+    causal query row keeps at least its own position."""
+    pos = jnp.arange(S)
+    causal = np.asarray(attention_bias(pos, pos, mixer="attn", causal=True,
+                                       window=0, chunk=0)) == 0
+    local = np.asarray(attention_bias(pos, pos, mixer="attn_local",
+                                      causal=True, window=window, chunk=0)) == 0
+    chunked = np.asarray(attention_bias(pos, pos, mixer="attn_chunked",
+                                        causal=True, window=0, chunk=chunk)) == 0
+    q = np.arange(S)[:, None]
+    k = np.arange(S)[None, :]
+    assert (causal == (k <= q)).all()
+    assert (local == ((k <= q) & (q - k < window))).all()
+    assert (chunked == ((k <= q) & (q // chunk == k // chunk))).all()
+    assert local[causal == 0].sum() == 0  # local ⊆ causal
+    assert np.diag(causal).all() and np.diag(local).all() and np.diag(chunked).all()
+
+
+@given(st.integers(1, 64), st.integers(0, 500))
+@settings(max_examples=80, deadline=None)
+def test_ring_positions_invariants(W, p_last):
+    """Slots hold exactly the last min(W, p_last+1) positions, each in its
+    position%W slot; unwritten slots are negative."""
+    pos = np.asarray(ring_positions(W, p_last))
+    valid = pos[pos >= 0]
+    expect = np.arange(max(p_last - W + 1, 0), p_last + 1)
+    assert sorted(valid.tolist()) == expect.tolist()
+    for j, p in enumerate(pos):
+        if p >= 0:
+            assert p % W == j  # slot invariant
+    assert (pos <= p_last).all()
+
+
+@given(st.integers(1, 16), st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_ring_positions_masked_by_bias(W, p_last):
+    """Negative (unwritten) ring slots are always masked by attention_bias."""
+    kv_pos = ring_positions(W, p_last)
+    bias = np.asarray(attention_bias(jnp.array([p_last]), kv_pos,
+                                     mixer="attn_local", causal=True,
+                                     window=W, chunk=0))[0]
+    kv = np.asarray(kv_pos)
+    assert (bias[kv < 0] < -1e29).all()
+    assert (bias[kv >= 0] == 0).all()  # every held position is attendable

@@ -1,0 +1,110 @@
+"""Eq. (1)-(4): reference transcriptions vs the vectorised jnp kernels."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, metrics as M
+from repro.core.arch import DLAConfig, default_config_space
+from repro.core.ir import LayerSpec, NetworkIR, vgg16_ir
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    return vgg16_ir(pool_mode="separate")
+
+
+def random_chain(rng, n=6):
+    layers = []
+    hw = int(rng.choice([8, 16, 32]))
+    c = int(rng.choice([3, 8, 16]))
+    for i in range(n):
+        cout = int(rng.choice([8, 16, 32]))
+        layers.append(LayerSpec(f"l{i}", "conv", c, cout, hw, hw, 3, 3, 1))
+        c = cout
+    return NetworkIR("rand", tuple(layers))
+
+
+def test_bandwidth_layer_by_layer_equals_sum_of_layers(vgg):
+    cuts = fusion.layer_by_layer_cuts(len(vgg))
+    bw = M.bandwidth_ref(vgg, cuts)
+    expect = sum(l.weight_words + l.in_words + l.out_words for l in vgg.layers)
+    assert bw == expect
+
+
+def test_bandwidth_full_fusion_only_edges(vgg):
+    cuts = np.zeros(len(vgg) - 1, dtype=bool)
+    bw = M.bandwidth_ref(vgg, cuts)
+    expect = (
+        sum(l.weight_words for l in vgg.layers)
+        + vgg.layers[0].in_words
+        + vgg.layers[-1].out_words
+    )
+    assert bw == expect
+
+
+def test_vgg16_macs_against_published_count(vgg):
+    # VGG-16 conv MACs at 224x224 are ~15.35 G (conv layers only).
+    macs = sum(l.macs for l in vgg.layers)
+    assert abs(macs - 15.35e9) / 15.35e9 < 0.01
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_vectorised_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    ir = random_chain(rng)
+    feat = ir.feature_matrix()
+    cuts_batch = fusion.enumerate_cuts(len(ir))
+    hw_space = [
+        DLAConfig("hsiao", 4, 4, 4, 4),
+        DLAConfig("vwa", 8, 8, 3, 8),
+        DLAConfig("hsiao", 2, 16, 16, 2),
+    ]
+    hw_rows = np.stack([c.as_row() for c in hw_space])
+    out = np.asarray(
+        M.evaluate_batch(
+            jnp.asarray(feat), jnp.asarray(cuts_batch), jnp.asarray(hw_rows),
+            jnp.asarray(M.area_consts_of(hw_space[0])),
+        )
+    )
+    for hi, hw in enumerate(hw_space):
+        for ci in range(0, cuts_batch.shape[0], 7):  # sample
+            ref = M.evaluate_ref(ir, cuts_batch[ci], hw)
+            got = out[hi, ci]
+            # evaluate_batch runs in f32 (jax default) => ~1e-7 relative
+            np.testing.assert_allclose(got[0], ref.bandwidth_words, rtol=1e-6)
+            np.testing.assert_allclose(got[1], ref.latency_cycles, rtol=1e-6)
+            np.testing.assert_allclose(got[2], ref.energy_nj, rtol=1e-6)
+            np.testing.assert_allclose(got[3], ref.area_um2, rtol=1e-6)
+
+
+def test_pe_busy_cycles_hsiao_vs_vwa():
+    hw_h = DLAConfig("hsiao", 4, 4, 4, 4)
+    hw_v = DLAConfig("vwa", 4, 4, 3, 4)
+    kw = dict(macs=1e6, n_in=16, n_out=32, kh=3, kw=3, pixels_out=1024)
+    # hsiao: one PE retires a 3x3 window/cycle
+    assert hw_h.pe_busy_cycles(**kw) == np.ceil(32 / 4) * np.ceil(16 / 4) * np.ceil(1024 / 16) * 1
+    # vwa: 3 columns stream kernel columns; kh * ceil(kw/3) cycles
+    assert hw_v.pe_busy_cycles(**kw) == np.ceil(32 / 4) * np.ceil(16 / 4) * np.ceil(1024 / 4) * 3
+
+
+def test_energy_monotone_in_dram_traffic(vgg):
+    hw = DLAConfig("hsiao", 4, 4, 4, 4)
+    lbl = M.evaluate_ref(vgg, fusion.layer_by_layer_cuts(len(vgg)), hw)
+    fus = M.evaluate_ref(vgg, vgg.pool_boundary_cuts(), hw)
+    assert fus.bandwidth_words < lbl.bandwidth_words
+    assert fus.energy_nj < lbl.energy_nj
+    assert fus.latency_cycles < lbl.latency_cycles
+    # area grows with fusion (bigger frame SRAMs)
+    assert fus.area_um2 >= lbl.area_um2
+
+
+def test_area_components(vgg):
+    hw = DLAConfig("hsiao", 4, 4, 4, 4)
+    cuts = vgg.pool_boundary_cuts()
+    if_w, w_w, of_w = M.buffer_words_ref(vgg, cuts)
+    a = M.area_ref(vgg, cuts, hw)
+    assert a == pytest.approx(
+        hw.area_pe_um2()
+        + (if_w + w_w + of_w) * hw.area_per_sram_byte_um2
+        + hw.area_controller_um2
+    )

@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the evaluator's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion, metrics as M
+from repro.core.arch import DLAConfig
+from repro.core.ir import LayerSpec, NetworkIR
+from repro.parallel.sharding import repair_spec
+
+
+def chain_strategy():
+    layer = st.tuples(
+        st.sampled_from([4, 8, 16]),  # cout
+        st.sampled_from([8, 16]),  # hw
+    )
+    return st.lists(layer, min_size=2, max_size=8)
+
+
+def build(chain):
+    layers = []
+    c = 4
+    for i, (cout, hw) in enumerate(chain):
+        layers.append(LayerSpec(f"l{i}", "conv", c, cout, 16, 16, 3, 3, 1))
+        c = cout
+    return NetworkIR("h", tuple(layers))
+
+
+@given(chain_strategy(), st.integers(0, 2**20 - 1))
+@settings(max_examples=60, deadline=None)
+def test_merging_groups_never_increases_bandwidth(chain, cut_bits):
+    """Eq. (1) invariant: removing any cut (fusing two adjacent groups)
+    removes one store+load pair — bandwidth is monotone in fusion."""
+    ir = build(chain)
+    L = len(ir)
+    cuts = np.array([(cut_bits >> i) & 1 for i in range(L - 1)], dtype=bool)
+    bw = M.bandwidth_ref(ir, cuts)
+    for i in range(L - 1):
+        if cuts[i]:
+            merged = cuts.copy()
+            merged[i] = False
+            assert M.bandwidth_ref(ir, merged) <= bw
+
+
+@given(chain_strategy(), st.integers(0, 2**20 - 1))
+@settings(max_examples=40, deadline=None)
+def test_bandwidth_decomposes_over_groups(chain, cut_bits):
+    ir = build(chain)
+    L = len(ir)
+    cuts = np.array([(cut_bits >> i) & 1 for i in range(L - 1)], dtype=bool)
+    groups = M.groups_from_cuts(cuts)
+    total = 0.0
+    for g in groups:
+        sub = NetworkIR("g", tuple(ir.layers[i] for i in g))
+        total += M.bandwidth_ref(sub, np.zeros(len(g) - 1, dtype=bool))
+    assert total == M.bandwidth_ref(ir, cuts)
+
+
+@given(chain_strategy())
+@settings(max_examples=30, deadline=None)
+def test_dp_is_optimal(chain):
+    ir = build(chain)
+    dp = fusion.optimal_cuts_dp(ir)
+    bf = fusion.brute_force_min_bw(ir)
+    assert dp.group_cost_words == bf.group_cost_words
+
+
+@given(chain_strategy(), st.integers(0, 2**20 - 1))
+@settings(max_examples=40, deadline=None)
+def test_latency_bandwidth_consistency(chain, cut_bits):
+    """Eq. (2)'s DRAM terms = Eq. (1) / bus width (same group structure)."""
+    ir = build(chain)
+    hw = DLAConfig("hsiao", 4, 4, 4, 4)
+    L = len(ir)
+    cuts = np.array([(cut_bits >> i) & 1 for i in range(L - 1)], dtype=bool)
+    lat = M.latency_ref(ir, cuts, hw)
+    bw = M.bandwidth_ref(ir, cuts)
+    pe = sum(
+        hw.pe_busy_cycles(
+            macs=l.macs, n_in=l.n_in, n_out=l.n_out, kh=l.kh, kw=l.kw,
+            pixels_out=(l.h_in // l.stride) * (l.w_in // l.stride),
+        )
+        for l in ir.layers
+    )
+    expected = bw / hw.dram_words_per_cycle + pe + L * hw.pipeline_latency
+    assert lat == expected
+
+
+# ---------------------------------------------------------------------------
+# Sharding-spec repair invariants
+# ---------------------------------------------------------------------------
+
+AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+@given(
+    st.lists(st.sampled_from([64, 128, 151655, 4096, 8, 1, 24576]),
+             min_size=1, max_size=4),
+    st.lists(st.sampled_from([None, "pod", "data", "model",
+                              ("pod", "data")]), min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_repair_spec_always_divides(shape, spec):
+    spec = tuple(spec[: len(shape)])
+    fixed = repair_spec(spec, tuple(shape), lambda a: AXES.get(a, 1))
+    used = []
+    for dim, axis in zip(shape, tuple(fixed) + (None,) * len(shape)):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        n = int(np.prod([AXES[a] for a in axes]))
+        assert dim % n == 0, (shape, spec, fixed)
+        for a in axes:
+            assert a not in used  # each mesh axis used at most once
+            used.append(a)

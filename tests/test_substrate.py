@@ -1,0 +1,198 @@
+"""Data pipeline, checkpointing, optimizer, fault tolerance."""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as CKPT
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data import TokenStream, make_batch
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.runtime.fault_tolerance import ResilientTrainer, flaky
+from repro.runtime.steps import make_init, make_train_step
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                   n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                   dtype="float32")
+RC = RunConfig(xent_chunk=16, attn_chunk_kv=16, learning_rate=2e-3,
+               warmup_steps=2)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_step_keyed():
+    b1 = make_batch(TINY, 4, 32, seed=7, step=3)
+    b2 = make_batch(TINY, 4, 32, seed=7, step=3)
+    b3 = make_batch(TINY, 4, 32, seed=7, step=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    b = make_batch(TINY, 2, 16, seed=0, step=0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions():
+    full = make_batch(TINY, 8, 16, seed=1, step=5, host=0, n_hosts=1)
+    h0 = make_batch(TINY, 8, 16, seed=1, step=5, host=0, n_hosts=2)
+    h1 = make_batch(TINY, 8, 16, seed=1, step=5, host=1, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4 and h1["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_stream_prefetch_and_replay():
+    s = TokenStream(TINY, 4, 16, seed=3)
+    step0, b0 = next(s)
+    step1, b1 = next(s)
+    assert (step0, step1) == (0, 1)
+    replay = s.batch_at(0)
+    np.testing.assert_array_equal(b0["tokens"], replay["tokens"])
+    s.close()
+
+
+def test_vlm_batch_masks_prefix():
+    cfg = dataclasses.replace(TINY, frontend="vision", frontend_len=4)
+    b = make_batch(cfg, 2, 16, seed=0, step=0)
+    assert b["frontend"].shape == (2, 4, 32)
+    assert (b["labels"][:, :4] == -1).all()
+    assert b["tokens"].shape == (2, 12)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip=1e9)
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(grads, state, params, lr=0.05, cfg=cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(grad_clip=1.0, weight_decay=0.0)
+    state = init_opt_state(params, cfg)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, state2, gnorm = adamw_update(g, state, params, lr=0.1, cfg=cfg)
+    assert float(gnorm) == pytest.approx(1e6)
+    # post-clip first moment bounded by (1-b1) * clip
+    assert float(jnp.abs(state2["m"]["w"]).max()) <= 0.11
+
+
+def test_adamw_bf16_state_roundtrip():
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    state = init_opt_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full(4, 0.5, jnp.bfloat16)}
+    p2, s2, _ = adamw_update(g, state, params, lr=0.01, cfg=cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["v"]["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3), "b": [np.ones(2), np.zeros(1)]}
+    CKPT.save(tmp_path, 5, tree, extra={"loss": 1.5})
+    assert CKPT.latest_step(tmp_path) == 5
+    back, extra = CKPT.restore(tmp_path, 5, like=tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    np.testing.assert_array_equal(back["b"][0], tree["b"][0])
+    assert extra["loss"] == 1.5
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": np.arange(10.0)}
+    path = CKPT.save(tmp_path, 1, tree)
+    # flip bytes in the array file
+    npz = path / "arrays.npz"
+    data = bytearray(npz.read_bytes())
+    data[-20] ^= 0xFF
+    npz.write_bytes(bytes(data))
+    with pytest.raises(Exception):
+        CKPT.restore(tmp_path, 1, like=tree)
+
+
+def test_checkpoint_latest_and_atomicity(tmp_path):
+    tree = {"a": np.ones(3)}
+    CKPT.save(tmp_path, 1, tree)
+    CKPT.save(tmp_path, 2, tree)
+    (tmp_path / "step_00000003.tmp").mkdir()  # simulated crashed save
+    assert CKPT.latest_step(tmp_path) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    ck = CKPT.AsyncCheckpointer(tmp_path)
+    ck.submit(7, {"x": jnp.arange(4.0)})
+    ck.wait()
+    assert ck.last_saved == 7
+    back, _ = CKPT.restore(tmp_path, 7, like={"x": np.zeros(4)})
+    np.testing.assert_array_equal(back["x"], np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def _trainer(tmp_path, hook=None, ckpt_every=5):
+    init = make_init(TINY, RC)
+    params, opt = init(jax.random.key(0))
+    stream = TokenStream(TINY, 4, 32, seed=0)
+    step = jax.jit(make_train_step(TINY, RC))
+    tr = ResilientTrainer(train_step=step, stream=stream,
+                          ckpt_dir=tmp_path, ckpt_every=ckpt_every,
+                          failure_hook=hook)
+    return tr, params, opt, stream
+
+
+def test_trainer_runs_and_learns(tmp_path):
+    tr, params, opt, stream = _trainer(tmp_path)
+    params, opt = tr.run(params, opt, 25)
+    stream.close()
+    assert tr.report.steps_run == 25
+    assert tr.report.last_loss < tr.report.losses[0]
+    assert CKPT.latest_step(tmp_path) is not None
+
+
+def test_trainer_recovers_from_failures(tmp_path):
+    hook = flaky({7, 13})
+    tr, params, opt, stream = _trainer(tmp_path, hook=hook, ckpt_every=4)
+    params, opt = tr.run(params, opt, 20)
+    stream.close()
+    assert tr.report.failures == 2
+    assert tr.report.restores == 2
+    assert tr.report.last_loss < tr.report.losses[0]
+    hb = pathlib.Path(tmp_path) / "heartbeat.json"
+    assert hb.exists()
+
+
+def test_failure_replay_is_deterministic(tmp_path):
+    """A run that fails and restores from checkpoint converges to the same
+    loss as a clean run: restore + counter-based data replay is bit-exact."""
+    tr1, p1, o1, s1 = _trainer(tmp_path / "clean", ckpt_every=5)
+    tr1.run(p1, o1, 12)
+    s1.close()
+    hook = flaky({9})  # fails after the step-4 checkpoint exists
+    tr2, p2, o2, s2 = _trainer(tmp_path / "flaky", hook=hook, ckpt_every=5)
+    tr2.run(p2, o2, 12)
+    s2.close()
+    assert tr2.report.restores == 1
+    assert tr2.report.last_loss == pytest.approx(tr1.report.last_loss, rel=1e-5)
