@@ -18,7 +18,7 @@ from repro.core.arch import (
     default_config_space, paper_config_space,
 )
 from repro.core.flow import compare_fusion, run_flow
-from repro.core.ir import vgg16_ir
+from repro.core.ir import residual_block_ir, resnet18_ir, vgg16_ir
 from repro.core.planner import plan_model
 
 ROWS: list[str] = []
@@ -184,6 +184,43 @@ def table6_planner():
              f"blockBWsave={plan.bw_saving*100:.1f}%")
 
 
+def table7_resnet_fusion():
+    """Graph-IR fusion on residual networks — groupings the chain IR could
+    never express (the skip tensor stays on-chip across a fused block)."""
+    print("\n== table7: resnet fusion (graph IR; beyond-paper) ==")
+    hw = PAPER_OPTIMAL_CONFIG
+
+    # One basic block: brute-force edge-cut optimum vs the best grouping a
+    # chain IR could express (= the skip edge forced to round-trip DRAM).
+    rb = residual_block_ir()
+    lbl_bw = M.bandwidth_ref(rb, fusion.layer_by_layer_cuts(rb))
+    dag, us = timed(fusion.brute_force_min_bw, rb)
+    dag_bw = M.bandwidth_ref(rb, dag.cuts)
+    skip_idx = next(
+        k for k, e in enumerate(rb.edges) if (e.src, e.dst) == (0, 3)
+    )
+    chain_bw = min(
+        M.bandwidth_ref(rb, c)
+        for c in fusion.enumerate_valid_edge_cuts(rb)
+        if c[skip_idx]
+    )
+    emit("table7.resblock_bw_reduction_pct", us,
+         f"{100*(1-dag_bw/lbl_bw):.1f};chain_best={100*(1-chain_bw/lbl_bw):.1f};"
+         f"dag_only_delta={100*(chain_bw-dag_bw)/lbl_bw:.1f}")
+
+    # Full ResNet-18: search-grouped vs layer-by-layer under the paper's hw.
+    g = resnet18_ir()
+    search, us = timed(fusion.optimal_cuts, g, reps=1)
+    cmp = compare_fusion(g, hw, fused_cuts=search.cuts)
+    emit("table7.resnet18_bw_reduction_pct", us, f"{cmp.bw_reduction*100:.1f}")
+    emit("table7.resnet18_latency_reduction_pct", us,
+         f"{cmp.latency_reduction*100:.1f}")
+    emit("table7.resnet18_energy_reduction_pct", us,
+         f"{cmp.energy_reduction*100:.1f}")
+    emit("table7.resnet18_groups", us, f"{search.n_groups}")
+    print(cmp.describe())
+
+
 def table7_roofline_summary():
     """Condensed §Roofline: per (arch x shape) single-pod bound + mfu cap."""
     print("\n== table7: dry-run roofline summary (single pod) ==")
@@ -247,6 +284,7 @@ TABLES = [
     table4_sweep_throughput,
     table5_kernel_fusion,
     table6_planner,
+    table7_resnet_fusion,
     table7_roofline_summary,
     table8_perf_iterations,
 ]

@@ -1,11 +1,14 @@
-"""The paper's optimisation flow (Sec. II-C).
+"""The paper's optimisation flow (Sec. II-C), generalised to graph IRs.
 
-For each (hardware configuration x layer grouping) candidate, estimate the
+For each (hardware configuration x fusion grouping) candidate, estimate the
 four metrics, reject candidates violating the user constraints, and return
 the feasible candidate with minimum energy.  The cross-product is evaluated
-as a single jitted/vmapped XLA program (:func:`repro.core.metrics.evaluate_batch`),
-which is the JAX-native realisation of the paper's exhaustive sweep — the
-benchmark reports candidates/second.
+as a single jitted/vmapped XLA program
+(:func:`repro.core.metrics.evaluate_batch_graph`), which is the JAX-native
+realisation of the paper's exhaustive sweep — the benchmark reports
+candidates/second.  Groupings are boolean cut vectors over the graph's
+edges; chains (``NetworkIR``) are embedded losslessly via
+:func:`repro.core.ir.as_graph`.
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ import numpy as np
 from . import fusion
 from . import metrics as M
 from .arch import Constraints, DLAConfig, default_config_space
-from .ir import NetworkIR
+from .ir import GraphIR, NetworkIR, as_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,15 +30,15 @@ class FlowResult:
     best_hw: DLAConfig
     best_cuts: np.ndarray
     best_metrics: M.Metrics
+    group_sizes: tuple[int, ...]
     n_candidates: int
     n_feasible: int
     sweep_seconds: float
     candidates_per_second: float
 
     def describe(self) -> str:
-        groups = M.groups_from_cuts(self.best_cuts)
         return (
-            f"best={self.best_hw.describe()} groups={[len(g) for g in groups]} "
+            f"best={self.best_hw.describe()} groups={list(self.group_sizes)} "
             f"BW={self.best_metrics.bandwidth_words/1e6:.2f}M words "
             f"lat={self.best_metrics.latency_cycles/1e6:.2f}M cyc "
             f"E={self.best_metrics.energy_nj/1e6:.2f} mJ "
@@ -54,8 +57,38 @@ def _metrics_from_row(row: np.ndarray) -> M.Metrics:
     )
 
 
+def groupings_batch(g: GraphIR, groupings: str | np.ndarray) -> np.ndarray:
+    """Resolve a groupings spec to a (C, E) boolean cut batch.
+
+    ``"exhaustive"`` — all valid edge cuts (2^(L-1) on a chain);
+    ``"pool"``       — the paper's pool-boundary policy + layer-by-layer;
+    ``"search"``/``"dp"`` — the grouping search optimum (chain DP fast path,
+    exhaustive or beam on DAGs) + layer-by-layer + pool boundaries;
+    or an explicit (C, E) bool array.
+    """
+    if not isinstance(groupings, str):
+        return np.atleast_2d(np.asarray(groupings, dtype=bool))
+    if groupings == "exhaustive":
+        try:
+            return fusion.enumerate_valid_edge_cuts(g)
+        except ValueError as e:
+            raise ValueError(
+                f"{g.name}: {e}; pass groupings='search' for large graphs"
+            ) from None
+    if groupings == "pool":
+        return np.stack([g.pool_boundary_cuts(), fusion.layer_by_layer_cuts(g)])
+    if groupings in ("dp", "search"):
+        rows = [
+            fusion.optimal_cuts(g).cuts,
+            fusion.layer_by_layer_cuts(g),
+            g.pool_boundary_cuts(),
+        ]
+        return np.unique(np.stack(rows), axis=0)
+    raise ValueError(groupings)
+
+
 def run_flow(
-    ir: NetworkIR,
+    ir: NetworkIR | GraphIR,
     *,
     config_space: Sequence[DLAConfig] | None = None,
     constraints: Constraints = Constraints(),
@@ -63,38 +96,27 @@ def run_flow(
 ) -> FlowResult:
     """Sweep (hw x grouping), filter by constraints, return min-energy point.
 
-    ``groupings``: "exhaustive" (all 2^(L-1)), "pool" (the paper's
-    pool-boundary policy plus layer-by-layer), "dp" (per-config optimal DP
-    grouping), or an explicit (C, L-1) bool array.
+    ``groupings`` is resolved by :func:`groupings_batch`.
     """
     if config_space is None:
         config_space = default_config_space()
-    feat = ir.feature_matrix()
-    L = feat.shape[0]
-
-    if isinstance(groupings, str):
-        if groupings == "exhaustive":
-            cuts_batch = fusion.enumerate_cuts(L)
-        elif groupings == "pool":
-            cuts_batch = np.stack(
-                [ir.pool_boundary_cuts(), fusion.layer_by_layer_cuts(L)]
-            )
-        elif groupings == "dp":
-            rows = [fusion.optimal_cuts_dp(ir).cuts, fusion.layer_by_layer_cuts(L)]
-            rows.append(ir.pool_boundary_cuts())
-            cuts_batch = np.unique(np.stack(rows), axis=0)
-        else:
-            raise ValueError(groupings)
-    else:
-        cuts_batch = np.asarray(groupings, dtype=bool)
+    g = as_graph(ir)
+    feat = g.node_features()
+    esrc, edst, ewords = g.edge_arrays()
+    cuts_batch = groupings_batch(g, groupings)
 
     hw_rows = np.stack([c.as_row() for c in config_space])
     area_consts = M.area_consts_of(config_space[0])
 
     t0 = time.perf_counter()
     out = np.asarray(
-        M.evaluate_batch(
+        M.evaluate_batch_graph(
             jnp.asarray(feat),
+            jnp.asarray(esrc),
+            jnp.asarray(edst),
+            jnp.asarray(ewords),
+            jnp.asarray(g.source_mask),
+            jnp.asarray(g.sink_mask),
             jnp.asarray(cuts_batch),
             jnp.asarray(hw_rows),
             jnp.asarray(area_consts),
@@ -110,10 +132,13 @@ def run_flow(
         raise ValueError("no candidate meets the constraints")
     energy = np.where(feasible, out[:, :, 2], np.inf)
     h, c = np.unravel_index(np.argmin(energy), energy.shape)
+    labels = fusion.cut_group_labels(g, cuts_batch[c])
+    sizes = tuple(len(grp) for grp in fusion.groups_from_labels(labels))
     return FlowResult(
         best_hw=config_space[h],
         best_cuts=cuts_batch[c],
         best_metrics=_metrics_from_row(out[h, c]),
+        group_sizes=sizes,
         n_candidates=n_cand,
         n_feasible=n_feas,
         sweep_seconds=dt,
@@ -141,16 +166,17 @@ class FusionComparison:
 
 
 def compare_fusion(
-    ir: NetworkIR,
+    ir: NetworkIR | GraphIR,
     hw: DLAConfig,
     fused_cuts: np.ndarray | None = None,
 ) -> FusionComparison:
     """Evaluate the paper's fused-vs-layer-by-layer comparison on ``ir``."""
+    g = as_graph(ir)
     if fused_cuts is None:
-        fused_cuts = ir.pool_boundary_cuts()
-    lbl_cuts = fusion.layer_by_layer_cuts(len(ir))
-    lbl = M.evaluate_ref(ir, lbl_cuts, hw)
-    fus = M.evaluate_ref(ir, fused_cuts, hw)
+        fused_cuts = g.pool_boundary_cuts()
+    lbl_cuts = fusion.layer_by_layer_cuts(g)
+    lbl = M.evaluate_ref(g, lbl_cuts, hw)
+    fus = M.evaluate_ref(g, fused_cuts, hw)
     return FusionComparison(
         lbl=lbl,
         fused=fus,

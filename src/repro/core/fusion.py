@@ -1,36 +1,52 @@
-"""Layer-fusion grouping search.
+"""Layer-fusion grouping search over chains and DAGs.
 
-The grouping space over an L-layer chain is the 2^(L-1) set of cut vectors.
-Three strategies, all returning cut vectors compatible with
+The grouping space over an L-layer *chain* is the 2^(L-1) set of cut
+vectors; over a general DAG it is the set of *valid* edge-cut vectors: the
+uncut edges must induce groups that are weakly connected (automatic — a
+group is a connected component of the uncut subgraph), **consistent**
+(every cut edge actually crosses two different groups) and **convex** (no
+dataflow may leave a group and re-enter it; equivalently the quotient graph
+obtained by contracting every group is acyclic).
+
+Strategies, all returning cut vectors compatible with
 :mod:`repro.core.metrics`:
 
-* ``enumerate_cuts``      — full enumeration (the paper's predefined-set sweep;
-  fine for VGG-16's 13-18 layers).
+* ``enumerate_cuts`` / ``enumerate_valid_edge_cuts`` — full enumeration
+  (the paper's predefined-set sweep; fine for VGG-16's 13-18 layers and for
+  DAGs of <= 16 edges).
 * ``pool boundary cuts``  — the paper's Sec. III policy (via
-  ``NetworkIR.pool_boundary_cuts``).
+  ``GraphIR.pool_boundary_cuts``).
 * ``optimal_cuts_dp``     — O(L^2) chain-partition DP.  Valid because Eq. (1)
   decomposes over groups (weights are grouping-independent; each group
   contributes in_first + out_last), and latency & energy are affine in the
   same per-group quantity, so one DP minimises all three simultaneously;
   buffer feasibility is a per-group predicate.  Tests cross-check DP ==
   brute force on random chains.
+* ``greedy_merge_cuts`` / ``beam_merge_cuts`` — bottom-up group merging for
+  general DAGs (bandwidth is monotone non-increasing under a valid merge,
+  so merging is the natural move; the SRAM budget and convexity are what
+  make the problem non-trivial).  Cross-checked against brute force on
+  random DAGs in tests.
+* ``optimal_cuts`` — dispatch: chain DP fast path, exhaustive enumeration
+  for small DAGs, beam search otherwise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 
-from .arch import DLAConfig
-from .ir import NetworkIR
+from .ir import GraphIR, NetworkIR, as_graph, scc_labels, uncut_component_labels
 from . import metrics as M
 
-MAX_EXHAUSTIVE_LAYERS = 21  # 2^20 cut vectors ~ 1M candidates
+MAX_EXHAUSTIVE_LAYERS = 21  # 2^20 cut vectors ~ 1M candidates (vectorised)
+# DAG enumeration runs a per-pattern Python validity check, so its cap is
+# much lower than the chain cap (2^16 ~ a few seconds; beam covers the rest).
+MAX_EXHAUSTIVE_EDGES = 16
 
 
 def enumerate_cuts(n_layers: int) -> np.ndarray:
-    """All 2^(L-1) cut vectors, shape (C, L-1), dtype bool."""
+    """All 2^(L-1) chain cut vectors, shape (C, L-1), dtype bool."""
     ncuts = n_layers - 1
     if n_layers > MAX_EXHAUSTIVE_LAYERS:
         raise ValueError(
@@ -44,7 +60,7 @@ def enumerate_cuts(n_layers: int) -> np.ndarray:
 
 
 def cuts_from_groups(groups: list[list[int]], n_layers: int) -> np.ndarray:
-    """Inverse of :func:`repro.core.metrics.groups_from_cuts`."""
+    """Inverse of :func:`repro.core.metrics.groups_from_cuts` (chains)."""
     cuts = np.zeros(n_layers - 1, dtype=bool)
     pos = 0
     for g in groups[:-1]:
@@ -53,15 +69,117 @@ def cuts_from_groups(groups: list[list[int]], n_layers: int) -> np.ndarray:
     return cuts
 
 
-def layer_by_layer_cuts(n_layers: int) -> np.ndarray:
-    return np.ones(n_layers - 1, dtype=bool)
+def layer_by_layer_cuts(n_cuts_or_graph) -> np.ndarray:
+    """All-cut vector: every layer its own group.  Accepts a GraphIR (one
+    entry per edge) or the legacy chain layer count (L-1 entries)."""
+    if isinstance(n_cuts_or_graph, GraphIR):
+        return np.ones(n_cuts_or_graph.n_edges, dtype=bool)
+    return np.ones(n_cuts_or_graph - 1, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# DAG cut validity
+# ---------------------------------------------------------------------------
+
+
+def cut_group_labels(g: GraphIR, cuts: np.ndarray) -> np.ndarray:
+    """(L,) group labels: connected components of the uncut subgraph,
+    relabelled to consecutive ints in order of first node appearance."""
+    return uncut_component_labels(len(g.nodes), g.edges, cuts)
+
+
+def groups_from_labels(labels: np.ndarray) -> list[list[int]]:
+    groups: list[list[int]] = [[] for _ in range(int(labels.max()) + 1)]
+    for i, lab in enumerate(labels):
+        groups[int(lab)].append(i)
+    return groups
+
+
+def _quotient_is_dag(g: GraphIR, labels: np.ndarray) -> bool:
+    """Convexity <=> the group-contracted graph is acyclic (every strongly
+    connected component of the quotient is a singleton)."""
+    n = int(labels.max()) + 1
+    arcs = {
+        (int(labels[e.src]), int(labels[e.dst]))
+        for e in g.edges
+        if labels[e.src] != labels[e.dst]
+    }
+    return len(set(scc_labels(n, arcs))) == n
+
+
+def is_valid_cuts(g: GraphIR, cuts: np.ndarray) -> bool:
+    """A cut vector is valid iff every cut edge crosses two different groups
+    (consistency) and every group is convex (quotient graph acyclic).
+    Weak connectivity is automatic: groups are components of uncut edges.
+    On a chain every cut vector is valid."""
+    cuts = np.asarray(cuts, dtype=bool)
+    labels = cut_group_labels(g, cuts)
+    for k, e in enumerate(g.edges):
+        if cuts[k] and labels[e.src] == labels[e.dst]:
+            return False  # cut edge internal to a group via another path
+    return _quotient_is_dag(g, labels)
+
+
+def cuts_from_labels(g: GraphIR, labels: np.ndarray) -> np.ndarray:
+    """(E,) cut vector: an edge is cut iff its endpoints have different labels."""
+    labels = np.asarray(labels)
+    return np.asarray(
+        [labels[e.src] != labels[e.dst] for e in g.edges], dtype=bool
+    )
+
+
+def enumerate_valid_edge_cuts(g: GraphIR) -> np.ndarray:
+    """All valid edge-cut vectors, shape (C, E), dtype bool.
+
+    Chains short-circuit to :func:`enumerate_cuts` (every vector is valid);
+    general DAGs filter the 2^E bit patterns through :func:`is_valid_cuts`.
+    """
+    if g.is_chain:
+        return enumerate_cuts(len(g.nodes))
+    E = g.n_edges
+    if E > MAX_EXHAUSTIVE_EDGES:
+        raise ValueError(
+            f"{E} edges -> 2^{E} cut patterns; use beam_merge_cuts"
+        )
+    if E == 0:
+        return np.zeros((1, 0), dtype=bool)
+    idx = np.arange(2**E, dtype=np.int64)
+    bits = ((idx[:, None] >> np.arange(E)[None, :]) & 1).astype(bool)
+    keep = [c for c in bits if is_valid_cuts(g, c)]
+    return np.stack(keep)
+
+
+# ---------------------------------------------------------------------------
+# Buffer feasibility
+# ---------------------------------------------------------------------------
 
 
 def group_max_intermediate(feat: np.ndarray, cuts: np.ndarray) -> float:
-    """Largest on-chip intermediate frame implied by the grouping (words)."""
+    """Largest on-chip intermediate implied by a *chain* grouping (words):
+    an internal producer holds its **pre-pool** frame (the inline pool only
+    reduces the DRAM write-out path) and its fused consumer holds the full
+    input operand."""
     end = np.concatenate([cuts, [True]])
-    inter = np.where(end, 0.0, feat[:, M.F_OUT])
+    held = np.maximum(feat[:-1, M.F_OUT_PRE], feat[1:, M.F_IN])
+    inter = np.where(end[:-1], 0.0, held)
     return float(inter.max(initial=0.0))
+
+
+def graph_max_intermediate(g: GraphIR, cuts: np.ndarray) -> float:
+    """Largest on-chip tensor implied by an edge-cut grouping: the max over
+    (a) pre-pool frames of nodes with >= 1 fused consumer and (b) summed
+    internal incoming tensors of any node (multi-input nodes hold all fused
+    operands at once)."""
+    cuts = np.asarray(cuts, dtype=bool)
+    feat = g.node_features()
+    internal_in = np.zeros(len(g.nodes))
+    internal_out = np.zeros(len(g.nodes), dtype=bool)
+    for k, e in enumerate(g.edges):
+        if not cuts[k]:
+            internal_in[e.dst] += e.words
+            internal_out[e.src] = True
+    need = np.where(internal_out, feat[:, M.F_OUT_PRE], 0.0)
+    return float(max(need.max(initial=0.0), internal_in.max(initial=0.0)))
 
 
 def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float) -> bool:
@@ -71,23 +189,26 @@ def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float
 def feasible_mask_batch(
     feat: np.ndarray, cuts_batch: np.ndarray, sram_budget_words: float
 ) -> np.ndarray:
-    """(C,) bool — vectorised buffer feasibility for a batch of groupings."""
-    end = np.concatenate(
-        [cuts_batch, np.ones((cuts_batch.shape[0], 1), dtype=bool)], axis=1
-    )
-    inter = np.where(end, 0.0, feat[None, :, M.F_OUT])
-    return inter.max(axis=1) <= sram_budget_words
+    """(C,) bool — vectorised chain buffer feasibility for a batch of groupings."""
+    held = np.maximum(feat[:-1, M.F_OUT_PRE], feat[1:, M.F_IN])
+    inter = np.where(cuts_batch, 0.0, held[None, :])
+    return inter.max(axis=1, initial=0.0) <= sram_budget_words
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class DPResult:
     cuts: np.ndarray
-    group_cost_words: float  # sum over groups of (in_first + out_last)
+    group_cost_words: float  # Eq. (1) minus the grouping-independent weights
     n_groups: int
 
 
 def optimal_cuts_dp(
-    ir: NetworkIR,
+    ir: NetworkIR | GraphIR,
     *,
     sram_budget_words: float = float("inf"),
     max_group_len: int | None = None,
@@ -95,13 +216,20 @@ def optimal_cuts_dp(
     """Min-bandwidth grouping via chain-partition DP (also min latency/energy).
 
     dp[j] = min cost of partitioning layers [0..j]; a group [i..j] is feasible
-    iff every internal intermediate out_words fits the SRAM budget and the
-    group length is within ``max_group_len``.
+    iff every internal intermediate pre-pool frame fits the SRAM budget and
+    the group length is within ``max_group_len``.  Requires a chain.
     """
-    feat = ir.feature_matrix()
+    g = as_graph(ir)
+    if not g.is_chain:
+        raise ValueError("optimal_cuts_dp requires a chain; use optimal_cuts")
+    feat = g.node_features()
     L = feat.shape[0]
-    ins = feat[:, M.F_IN]
+    # A group starting at layer i>0 reads its cut incoming edge's words (==
+    # in_words for NetworkIR embeddings, but not for hand-built chain graphs).
+    _, _, ewords = g.edge_arrays()
+    ins = np.concatenate([feat[:1, M.F_IN], ewords])
     outs = feat[:, M.F_OUT]
+    pre = feat[:, M.F_OUT_PRE]
     INF = float("inf")
     dp = np.full(L + 1, INF)
     back = np.full(L + 1, -1, dtype=np.int64)
@@ -111,10 +239,12 @@ def optimal_cuts_dp(
         lo = 0 if max_group_len is None else max(0, j - max_group_len)
         # iterate group starts i (0-based layer index) from j-1 down to lo
         for i in range(j - 1, lo - 1, -1):
-            # group = layers [i .. j-1]; internal intermediates are outputs of
-            # layers i .. j-2
+            # group = layers [i .. j-1]; fusing edge i holds both the
+            # producer's pre-pool frame (OF SRAM) and the edge's words (the
+            # consumer's IF operand) on chip — same bound as
+            # graph_max_intermediate.
             if i < j - 1:
-                max_inter = max(max_inter, outs[i])
+                max_inter = max(max_inter, pre[i], ewords[i])
             if max_inter > sram_budget_words:
                 break  # growing the group further only increases max_inter
             cost = dp[i] + ins[i] + outs[j - 1]
@@ -135,26 +265,133 @@ def optimal_cuts_dp(
     return DPResult(cuts=cuts, group_cost_words=float(dp[L]), n_groups=len(groups))
 
 
+def _graph_cost(g: GraphIR, cuts: np.ndarray) -> float:
+    """Grouping-dependent part of Eq. (1) (bandwidth minus weight streaming)."""
+    return M.bandwidth_ref(g, cuts) - float(g.total_weight_words)
+
+
 def brute_force_min_bw(
-    ir: NetworkIR,
+    ir: NetworkIR | GraphIR,
     *,
     sram_budget_words: float = float("inf"),
     max_group_len: int | None = None,
 ) -> DPResult:
-    """Exhaustive min-bandwidth grouping (test oracle for the DP)."""
-    feat = ir.feature_matrix()
-    L = feat.shape[0]
+    """Exhaustive min-bandwidth grouping over valid edge cuts (test oracle
+    for the DP and for the greedy/beam DAG searches)."""
+    g = as_graph(ir)
     best_cost, best_cuts, best_groups = float("inf"), None, 0
-    for cuts in enumerate_cuts(L):
-        if not buffer_feasible(feat, cuts, sram_budget_words):
+    for cuts in enumerate_valid_edge_cuts(g):
+        if graph_max_intermediate(g, cuts) > sram_budget_words:
             continue
-        groups = M.groups_from_cuts(cuts)
-        if max_group_len is not None and any(len(g) > max_group_len for g in groups):
+        labels = cut_group_labels(g, cuts)
+        if max_group_len is not None and any(
+            len(grp) > max_group_len for grp in groups_from_labels(labels)
+        ):
             continue
-        start, end = M.group_masks(cuts)
-        cost = float(feat[start, M.F_IN].sum() + feat[end, M.F_OUT].sum())
+        cost = _graph_cost(g, cuts)
         if cost < best_cost:
-            best_cost, best_cuts, best_groups = cost, cuts, len(groups)
+            best_cost, best_cuts = cost, cuts
+            best_groups = int(labels.max()) + 1
     if best_cuts is None:
         raise ValueError("no feasible grouping under the SRAM budget")
     return DPResult(cuts=best_cuts, group_cost_words=best_cost, n_groups=best_groups)
+
+
+def _merge_moves(
+    g: GraphIR, labels: np.ndarray, sram_budget_words: float
+) -> list[tuple[float, np.ndarray]]:
+    """All valid, feasible single merges from ``labels`` as (cost, labels)."""
+    moves = []
+    tried: set[tuple[int, int]] = set()
+    for e in g.edges:
+        a, b = int(labels[e.src]), int(labels[e.dst])
+        if a == b or (a, b) in tried:
+            continue
+        tried.add((a, b))
+        merged = np.where(labels == b, a, labels)
+        cuts = cuts_from_labels(g, merged)
+        if not _quotient_is_dag(g, merged):
+            continue  # merge would make a group non-convex
+        if graph_max_intermediate(g, cuts) > sram_budget_words:
+            continue
+        moves.append((_graph_cost(g, cuts), merged))
+    return moves
+
+
+def greedy_merge_cuts(
+    ir: NetworkIR | GraphIR,
+    *,
+    sram_budget_words: float = float("inf"),
+) -> DPResult:
+    """Greedy bottom-up merging: start layer-by-layer, repeatedly apply the
+    single group merge with the best bandwidth until none improves."""
+    g = as_graph(ir)
+    labels = np.arange(len(g.nodes))
+    cost = _graph_cost(g, cuts_from_labels(g, labels))
+    while True:
+        moves = _merge_moves(g, labels, sram_budget_words)
+        if not moves:
+            break
+        best_cost, best_labels = min(moves, key=lambda m: m[0])
+        if best_cost >= cost:
+            break
+        cost, labels = best_cost, best_labels
+    labels = cut_group_labels(g, cuts_from_labels(g, labels))
+    return DPResult(
+        cuts=cuts_from_labels(g, labels),
+        group_cost_words=cost,
+        n_groups=int(labels.max()) + 1,
+    )
+
+
+def beam_merge_cuts(
+    ir: NetworkIR | GraphIR,
+    *,
+    beam_width: int = 32,
+    sram_budget_words: float = float("inf"),
+) -> DPResult:
+    """Beam search over merge sequences (greedy with ``beam_width`` frontier
+    states).  Keeps the best state ever visited, so it can only improve on
+    :func:`greedy_merge_cuts` for the same width >= 1."""
+    g = as_graph(ir)
+    start = np.arange(len(g.nodes))
+    start_cost = _graph_cost(g, cuts_from_labels(g, start))
+    frontier: list[tuple[float, np.ndarray]] = [(start_cost, start)]
+    best_cost, best_labels = start_cost, start
+    while frontier:
+        candidates: dict[tuple[int, ...], tuple[float, np.ndarray]] = {}
+        for cost, labels in frontier:
+            for mc, ml in _merge_moves(g, labels, sram_budget_words):
+                key = tuple(cut_group_labels(g, cuts_from_labels(g, ml)))
+                if key not in candidates or mc < candidates[key][0]:
+                    candidates[key] = (mc, ml)
+        if not candidates:
+            break
+        ranked = sorted(candidates.values(), key=lambda m: m[0])
+        frontier = ranked[:beam_width]
+        if ranked[0][0] < best_cost:
+            best_cost, best_labels = ranked[0]
+    labels = cut_group_labels(g, cuts_from_labels(g, best_labels))
+    return DPResult(
+        cuts=cuts_from_labels(g, labels),
+        group_cost_words=best_cost,
+        n_groups=int(labels.max()) + 1,
+    )
+
+
+def optimal_cuts(
+    ir: NetworkIR | GraphIR,
+    *,
+    sram_budget_words: float = float("inf"),
+    beam_width: int = 32,
+) -> DPResult:
+    """Grouping search dispatch: chain DP fast path; exhaustive enumeration
+    for small DAGs; beam merge otherwise."""
+    g = as_graph(ir)
+    if g.is_chain:
+        return optimal_cuts_dp(g, sram_budget_words=sram_budget_words)
+    if g.n_edges <= MAX_EXHAUSTIVE_EDGES and len(g.nodes) <= MAX_EXHAUSTIVE_LAYERS:
+        return brute_force_min_bw(g, sram_budget_words=sram_budget_words)
+    return beam_merge_cuts(
+        g, beam_width=beam_width, sram_budget_words=sram_budget_words
+    )

@@ -1,16 +1,39 @@
-"""Layer-level intermediate representation for the pre-RTL evaluator.
+"""Layer/graph intermediate representation for the pre-RTL evaluator.
 
 The paper (Yang & Chang, ISOCC'21) evaluates networks as chains of layers,
 each a convolution with ``N*Nih*Niw`` input frames, ``N*Nkh*Nkw*M`` filter
 kernels and ``M*Noh*Now`` output frames (Sec. II-B).  This module defines that
-layer abstraction plus builders for:
+layer abstraction plus two network representations:
 
-* VGG-16 (the paper's own experiment, Sec. III),
-* transformer blocks (matmuls expressed as 1x1 convolutions over ``seq``
-  "pixels"), so the same evaluator / fusion flow runs over every assigned
-  architecture.
+* :class:`NetworkIR` — the paper's original *chain* of layers.
+* :class:`GraphIR`   — a DAG of layer nodes joined by explicit tensor edges,
+  generalising the fusion-group search to residual / branching networks
+  (LoopTree frames fused-layer scheduling as exactly this graph-partitioning
+  problem).  A chain is the special case where edge ``i`` connects node ``i``
+  to node ``i+1``; :func:`as_graph` performs that embedding losslessly.
 
-Everything here is plain Python + numpy features extraction; the vectorised
+Fusion groups on a graph are described by a boolean vector over *edges*: a
+cut edge crosses a group boundary (its tensor round-trips through DRAM), an
+uncut edge stays inside a group (its tensor lives in on-chip SRAM).  For a
+residual basic block the cut space looks like::
+
+        in ──e0──> conv_a ──e1──> conv_b ──e2──> add ──e4──> out
+         │                                        ^
+         └────────────────e3 (skip)───────────────┘
+
+  cutting {e0,e1,e2,e3,e4}  = layer-by-layer (every tensor hits DRAM);
+  cutting {e0,e4} only      = the whole block is one fusion group — the
+  skip tensor e3 *and* both conv intermediates stay in SRAM, a grouping a
+  chain IR cannot even express (e3 is a second consumer of ``in``'s output).
+  A valid group must be weakly connected and convex (no dataflow may leave
+  the group and re-enter), which on the quotient graph means acyclicity —
+  see :mod:`repro.core.fusion`.
+
+Builders cover VGG-16 (the paper's own experiment, Sec. III), transformer
+blocks / LMs (matmuls as 1x1 convolutions over ``seq`` "pixels"), ResNet-18
+(residual DAG) and an encoder–decoder block (cross-attention DAG).
+
+Everything here is plain Python + numpy feature extraction; the vectorised
 metric kernels live in :mod:`repro.core.metrics`.
 """
 from __future__ import annotations
@@ -118,6 +141,23 @@ class LayerSpec:
         )
 
 
+def _feature_row(l: LayerSpec) -> list[float]:
+    """One feature vector (order = ``NetworkIR.FEATURES``)."""
+    return [
+        l.weight_words,
+        l.in_words,
+        l.out_words,
+        l.out_words_prepool,
+        l.macs,
+        1.0 if l.kind == "pool" else 0.0,
+        l.kh,
+        l.kw,
+        l.n_in,
+        l.n_out,
+        (l.h_in // l.stride) * (l.w_in // l.stride),
+    ]
+
+
 @dataclasses.dataclass(frozen=True)
 class NetworkIR:
     """A chain of layers (the unit the fusion search partitions)."""
@@ -160,24 +200,7 @@ class NetworkIR:
 
     def feature_matrix(self) -> np.ndarray:
         """(L, F) float64 matrix consumed by :mod:`repro.core.metrics`."""
-        rows = []
-        for l in self.layers:
-            rows.append(
-                [
-                    l.weight_words,
-                    l.in_words,
-                    l.out_words,
-                    l.out_words_prepool,
-                    l.macs,
-                    1.0 if l.kind == "pool" else 0.0,
-                    l.kh,
-                    l.kw,
-                    l.n_in,
-                    l.n_out,
-                    (l.h_in // l.stride) * (l.w_in // l.stride),
-                ]
-            )
-        return np.asarray(rows, dtype=np.float64)
+        return np.asarray([_feature_row(l) for l in self.layers], dtype=np.float64)
 
     def pool_boundary_cuts(self) -> np.ndarray:
         """The paper's VGG-16 grouping: cut after every pooling stage.
@@ -332,3 +355,462 @@ def lm_ir(
 
 def chain_ir(name: str, layers: Iterable[LayerSpec]) -> NetworkIR:
     return NetworkIR(name, tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# Graph IR — DAG of layer nodes with explicit tensor edges
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSpec:
+    """A tensor flowing from node ``src`` to node ``dst``.
+
+    ``words`` is the tensor's word count as *read by the consumer*: if the
+    edge is cut (crosses a fusion-group boundary) the consumer streams
+    ``words`` from DRAM; if the edge is internal the tensor occupies
+    ``words`` of on-chip frame SRAM instead.  For chain embeddings this is
+    the consumer layer's ``in_words`` so chain metrics stay bit-identical.
+    """
+
+    src: int
+    dst: int
+    words: int
+
+    def __post_init__(self):
+        if self.src < 0 or self.dst <= self.src:
+            raise ValueError(
+                f"edge ({self.src}->{self.dst}) must be topological (src < dst)"
+            )
+        if self.words <= 0:
+            raise ValueError(f"edge ({self.src}->{self.dst}) has words <= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphIR:
+    """A DAG of layers (the unit the edge-cut fusion search partitions).
+
+    Nodes are :class:`LayerSpec` in topological order; every edge satisfies
+    ``src < dst`` and edges are stored sorted by ``(src, dst)``.  Nodes with
+    no incoming edge read their input frame from DRAM unconditionally;
+    nodes with no outgoing edge write their output frame unconditionally.
+    """
+
+    name: str
+    nodes: tuple[LayerSpec, ...]
+    edges: tuple[EdgeSpec, ...]
+
+    def __post_init__(self):
+        if not self.nodes:
+            raise ValueError("empty graph")
+        L = len(self.nodes)
+        seen = set()
+        for e in self.edges:
+            if e.dst >= L:
+                raise ValueError(f"edge ({e.src}->{e.dst}) out of range (L={L})")
+            if (e.src, e.dst) in seen:
+                raise ValueError(f"duplicate edge ({e.src}->{e.dst})")
+            seen.add((e.src, e.dst))
+        object.__setattr__(
+            self, "edges", tuple(sorted(self.edges, key=lambda e: (e.src, e.dst)))
+        )
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def is_chain(self) -> bool:
+        """True iff the graph is exactly the chain embedding (edge i: i->i+1)."""
+        return len(self.edges) == len(self.nodes) - 1 and all(
+            e.src == i and e.dst == i + 1 for i, e in enumerate(self.edges)
+        )
+
+    @property
+    def total_macs(self) -> int:
+        return sum(n.macs for n in self.nodes)
+
+    @property
+    def total_weight_words(self) -> int:
+        return sum(n.weight_words for n in self.nodes)
+
+    # ---- numpy views for the metric kernels --------------------------------
+    FEATURES = NetworkIR.FEATURES
+
+    def node_features(self) -> np.ndarray:
+        """(L, F) float64 matrix (same columns as ``NetworkIR.feature_matrix``)."""
+        return np.asarray([_feature_row(n) for n in self.nodes], dtype=np.float64)
+
+    def edge_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, words) arrays of shape (E,): int64, int64, float64."""
+        src = np.asarray([e.src for e in self.edges], dtype=np.int64)
+        dst = np.asarray([e.dst for e in self.edges], dtype=np.int64)
+        words = np.asarray([e.words for e in self.edges], dtype=np.float64)
+        return src, dst, words
+
+    @property
+    def in_degree(self) -> np.ndarray:
+        deg = np.zeros(len(self.nodes), dtype=np.int64)
+        for e in self.edges:
+            deg[e.dst] += 1
+        return deg
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        deg = np.zeros(len(self.nodes), dtype=np.int64)
+        for e in self.edges:
+            deg[e.src] += 1
+        return deg
+
+    @property
+    def source_mask(self) -> np.ndarray:
+        return self.in_degree == 0
+
+    @property
+    def sink_mask(self) -> np.ndarray:
+        return self.out_degree == 0
+
+    def successors(self, i: int) -> list[int]:
+        return [e.dst for e in self.edges if e.src == i]
+
+    def predecessors(self, i: int) -> list[int]:
+        return [e.src for e in self.edges if e.dst == i]
+
+    def pool_boundary_cuts(self) -> np.ndarray:
+        """The paper's Sec. III policy lifted to edges: cut every edge whose
+        producer ends a pooling stage (standalone pool layer or absorbed
+        pool), then repaired to a *valid* partition (a raw per-edge policy
+        can cut an edge whose endpoints stay connected through a skip path,
+        or leave a non-convex group).  On a chain embedding this equals
+        ``NetworkIR.pool_boundary_cuts``."""
+        cuts = np.zeros(len(self.edges), dtype=bool)
+        for k, e in enumerate(self.edges):
+            p = self.nodes[e.src]
+            if p.kind == "pool" or p.pool_after > 1:
+                cuts[k] = True
+        return _repair_partition_cuts(len(self.nodes), self.edges, cuts)
+
+    def describe(self) -> str:
+        lines = [f"graph {self.name}: {len(self.nodes)} nodes, {len(self.edges)} edges"]
+        for i, n in enumerate(self.nodes):
+            preds = self.predecessors(i)
+            tag = f" <- {preds}" if preds else " <- (DRAM)"
+            lines.append(f"  [{i:3d}] {n.describe()}{tag}")
+        return "\n".join(lines)
+
+
+def uncut_component_labels(
+    n_nodes: int, edges: tuple[EdgeSpec, ...], cuts: np.ndarray
+) -> np.ndarray:
+    """(L,) group labels: connected components of the uncut subgraph,
+    relabelled to consecutive ints in order of first node appearance.
+    The single partition-labelling used by both the cut-policy repair here
+    and the fusion search (:mod:`repro.core.fusion`)."""
+    cuts = np.asarray(cuts, dtype=bool)
+    parent = list(range(n_nodes))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for k, e in enumerate(edges):
+        if not cuts[k]:
+            ra, rb = find(e.src), find(e.dst)
+            if ra != rb:
+                parent[rb] = ra
+    remap: dict[int, int] = {}
+    out = np.empty(n_nodes, dtype=np.int64)
+    for i in range(n_nodes):
+        r = find(i)
+        if r not in remap:
+            remap[r] = len(remap)
+        out[i] = remap[r]
+    return out
+
+
+def scc_labels(n: int, arcs: set[tuple[int, int]]) -> list[int]:
+    """Strongly-connected-component id per vertex (iterative Kosaraju)."""
+    adj: list[list[int]] = [[] for _ in range(n)]
+    radj: list[list[int]] = [[] for _ in range(n)]
+    for a, b in arcs:
+        adj[a].append(b)
+        radj[b].append(a)
+    order: list[int] = []
+    seen = [False] * n
+    for s in range(n):
+        if seen[s]:
+            continue
+        seen[s] = True
+        stack = [(s, 0)]
+        while stack:
+            u, i = stack[-1]
+            if i < len(adj[u]):
+                stack[-1] = (u, i + 1)
+                v = adj[u][i]
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append((v, 0))
+            else:
+                order.append(u)
+                stack.pop()
+    comp = [-1] * n
+    c = 0
+    for s in reversed(order):
+        if comp[s] != -1:
+            continue
+        comp[s] = c
+        stack2 = [s]
+        while stack2:
+            u = stack2.pop()
+            for v in radj[u]:
+                if comp[v] == -1:
+                    comp[v] = c
+                    stack2.append(v)
+        c += 1
+    return comp
+
+
+def _repair_partition_cuts(
+    n_nodes: int, edges: tuple[EdgeSpec, ...], cuts: np.ndarray
+) -> np.ndarray:
+    """Round an arbitrary per-edge cut policy to the nearest valid partition.
+
+    Groups become the connected components of the uncut subgraph (fixes cut
+    edges that are internal via another path), then any directed cycle among
+    groups is contracted (fixes non-convex groups; the condensation of the
+    quotient graph is acyclic by construction).
+    """
+    labels = uncut_component_labels(n_nodes, edges, cuts)
+    arcs = {
+        (int(labels[e.src]), int(labels[e.dst]))
+        for e in edges
+        if labels[e.src] != labels[e.dst]
+    }
+    comp = scc_labels(int(labels.max()) + 1, arcs)
+    final = [comp[labels[i]] for i in range(n_nodes)]
+    return np.asarray(
+        [final[e.src] != final[e.dst] for e in edges], dtype=bool
+    )
+
+
+def as_graph(ir: "NetworkIR | GraphIR") -> GraphIR:
+    """Embed a chain as a GraphIR (identity on GraphIR inputs).
+
+    Chain edge ``i`` connects node ``i`` to node ``i+1`` and carries the
+    consumer's ``in_words`` so that edge-cut metrics reproduce the chain
+    metrics bit-for-bit (cut edge k  <=>  group boundary after layer k).
+    """
+    if isinstance(ir, GraphIR):
+        return ir
+    edges = tuple(
+        EdgeSpec(i, i + 1, ir.layers[i + 1].in_words)
+        for i in range(len(ir.layers) - 1)
+    )
+    return GraphIR(ir.name, tuple(ir.layers), edges)
+
+
+def graph_ir(
+    name: str,
+    nodes: Sequence[LayerSpec],
+    edges: Iterable[tuple[int, int] | tuple[int, int, int] | EdgeSpec],
+) -> GraphIR:
+    """Build a GraphIR; 2-tuple edges default to the producer's out_words."""
+    nodes = tuple(nodes)
+    specs = []
+    for e in edges:
+        if isinstance(e, EdgeSpec):
+            specs.append(e)
+        elif len(e) == 2:
+            specs.append(EdgeSpec(e[0], e[1], nodes[e[0]].out_words))
+        else:
+            specs.append(EdgeSpec(e[0], e[1], e[2]))
+    return GraphIR(name, nodes, tuple(specs))
+
+
+# ---------------------------------------------------------------------------
+# DAG builders
+# ---------------------------------------------------------------------------
+
+RESNET18_STAGE_PLAN = (
+    # (stage, n_blocks, channels, first_block_stride)
+    (1, 2, 64, 1),
+    (2, 2, 128, 2),
+    (3, 2, 256, 2),
+    (4, 2, 512, 2),
+)
+
+
+def resnet18_ir(*, input_hw: int = 224) -> GraphIR:
+    """ResNet-18 as a residual DAG (He et al., 2016; ImageNet geometry).
+
+    Each basic block is ``conv3x3 -> conv3x3 -> add`` with a skip edge from
+    the block input to the add node; stride-2 blocks project the skip
+    through a 1x1 conv.  The skip edges are exactly what the chain IR could
+    not represent: fusing a whole block keeps the skip tensor on-chip,
+    which the edge-cut metrics reward with one saved store+load pair.
+    """
+    nodes: list[LayerSpec] = []
+    edges: list[EdgeSpec] = []
+
+    def add_node(spec: LayerSpec) -> int:
+        nodes.append(spec)
+        return len(nodes) - 1
+
+    def connect(src: int, dst: int, words: int | None = None):
+        edges.append(EdgeSpec(src, dst, nodes[src].out_words if words is None else words))
+
+    conv1 = add_node(LayerSpec("conv1", "conv", 3, 64, input_hw, input_hw, 7, 7, 2))
+    pool1 = add_node(
+        LayerSpec("pool1", "pool", 64, 64, input_hw // 2, input_hw // 2, 3, 3, 2)
+    )
+    connect(conv1, pool1)
+    cur = pool1
+    c_in = 64
+    hw_cur = input_hw // 4  # after conv1 (stride 2) + pool1 (stride 2)
+    for stage, n_blocks, c_out, stride0 in RESNET18_STAGE_PLAN:
+        for b in range(n_blocks):
+            stride = stride0 if b == 0 else 1
+            cin_blk = c_in if b == 0 else c_out
+            tag = f"s{stage}b{b}"
+            ca = add_node(
+                LayerSpec(f"{tag}.conv_a", "conv", cin_blk, c_out, hw_cur, hw_cur, 3, 3, stride)
+            )
+            connect(cur, ca)
+            hw_out = hw_cur // stride
+            cb = add_node(
+                LayerSpec(f"{tag}.conv_b", "conv", c_out, c_out, hw_out, hw_out, 3, 3, 1)
+            )
+            connect(ca, cb)
+            if stride != 1 or cin_blk != c_out:
+                ds = add_node(
+                    LayerSpec(f"{tag}.downsample", "conv", cin_blk, c_out, hw_cur, hw_cur, 1, 1, stride)
+                )
+                connect(cur, ds)
+                skip = ds
+            else:
+                skip = cur
+            add = add_node(
+                LayerSpec(f"{tag}.add", "elementwise", c_out, c_out, hw_out, hw_out)
+            )
+            connect(cb, add)
+            connect(skip, add)  # the residual edge a chain IR cannot express
+            cur = add
+            hw_cur = hw_out
+        c_in = c_out
+    gap = add_node(
+        LayerSpec("avgpool", "pool", 512, 512, hw_cur, hw_cur, hw_cur, hw_cur, hw_cur)
+    )
+    connect(cur, gap)
+    fc = add_node(LayerSpec("fc", "fc", 512, 1000, 1, 1))
+    connect(gap, fc)
+    return GraphIR("resnet18", tuple(nodes), tuple(edges))
+
+
+def residual_block_ir(
+    *, channels: int = 128, hw: int = 28, name: str = "resblock"
+) -> GraphIR:
+    """One ResNet basic block (identity skip) — the minimal DAG exhibiting a
+    fusion group the chain IR cannot express (see the module docstring)."""
+    nodes = (
+        LayerSpec(f"{name}.in", "conv", channels, channels, hw, hw, 1, 1, 1),
+        LayerSpec(f"{name}.conv_a", "conv", channels, channels, hw, hw, 3, 3, 1),
+        LayerSpec(f"{name}.conv_b", "conv", channels, channels, hw, hw, 3, 3, 1),
+        LayerSpec(f"{name}.add", "elementwise", channels, channels, hw, hw),
+    )
+    edges = (
+        EdgeSpec(0, 1, nodes[0].out_words),
+        EdgeSpec(1, 2, nodes[1].out_words),
+        EdgeSpec(2, 3, nodes[2].out_words),
+        EdgeSpec(0, 3, nodes[0].out_words),  # skip
+    )
+    return GraphIR(name, nodes, edges)
+
+
+def encoder_decoder_ir(
+    *,
+    name: str = "encdec",
+    d_model: int = 512,
+    n_heads: int = 8,
+    d_ff: int = 2048,
+    seq_enc: int = 512,
+    seq_dec: int = 128,
+) -> GraphIR:
+    """One encoder layer + one decoder layer with cross-attention.
+
+    The encoder output ("memory") fans out to the decoder's cross-attention
+    K/V projection — a long-range branch the chain IR cannot express.  If
+    the memory edge is left uncut, the encoder output never round-trips
+    through DRAM between the encoder and the decoder's cross-attention.
+    """
+    nodes: list[LayerSpec] = []
+    edges: list[EdgeSpec] = []
+
+    def add_node(spec: LayerSpec) -> int:
+        nodes.append(spec)
+        return len(nodes) - 1
+
+    def connect(src: int, dst: int, words: int | None = None):
+        edges.append(EdgeSpec(src, dst, nodes[src].out_words if words is None else words))
+
+    def attn_chain(prefix: str, seq: int, prev: int | None) -> int:
+        q = add_node(LayerSpec(f"{prefix}.q", "matmul", d_model, d_model, seq, 1))
+        if prev is not None:
+            connect(prev, q)
+        kv = add_node(LayerSpec(f"{prefix}.kv", "matmul", d_model, 2 * d_model, seq, 1))
+        if prev is not None:
+            connect(prev, kv)
+        qk = add_node(
+            LayerSpec(f"{prefix}.qk", "actmul", d_model, n_heads * seq, seq, 1)
+        )
+        connect(q, qk)
+        connect(kv, qk)
+        pv = add_node(
+            LayerSpec(f"{prefix}.pv", "actmul", n_heads * seq, d_model, seq, 1)
+        )
+        connect(qk, pv)
+        connect(kv, pv)
+        o = add_node(LayerSpec(f"{prefix}.o", "matmul", d_model, d_model, seq, 1))
+        connect(pv, o)
+        return o
+
+    def ffn(prefix: str, seq: int, prev: int) -> int:
+        w1 = add_node(LayerSpec(f"{prefix}.w1", "matmul", d_model, d_ff, seq, 1))
+        connect(prev, w1)
+        w2 = add_node(LayerSpec(f"{prefix}.w2", "matmul", d_ff, d_model, seq, 1))
+        connect(w1, w2)
+        return w2
+
+    # Encoder layer: self-attention + FFN; w2 output is the memory.
+    enc_o = attn_chain(f"{name}.enc.self", seq_enc, None)
+    memory = ffn(f"{name}.enc", seq_enc, enc_o)
+
+    # Decoder layer: self-attention over seq_dec ...
+    dec_o = attn_chain(f"{name}.dec.self", seq_dec, None)
+    # ... then cross-attention: Q from the decoder, K/V from the encoder memory.
+    xq = add_node(LayerSpec(f"{name}.dec.xq", "matmul", d_model, d_model, seq_dec, 1))
+    connect(dec_o, xq)
+    xkv = add_node(LayerSpec(f"{name}.dec.xkv", "matmul", d_model, 2 * d_model, seq_enc, 1))
+    connect(memory, xkv)  # the cross-link branch
+    xqk = add_node(
+        LayerSpec(f"{name}.dec.xqk", "actmul", d_model, n_heads * seq_enc, seq_dec, 1)
+    )
+    connect(xq, xqk)
+    connect(xkv, xqk)
+    xpv = add_node(
+        LayerSpec(f"{name}.dec.xpv", "actmul", n_heads * seq_enc, d_model, seq_dec, 1)
+    )
+    connect(xqk, xpv)
+    connect(xkv, xpv)
+    xo = add_node(LayerSpec(f"{name}.dec.xo", "matmul", d_model, d_model, seq_dec, 1))
+    connect(xpv, xo)
+    ffn(f"{name}.dec", seq_dec, xo)
+    return GraphIR(name, tuple(nodes), tuple(edges))

@@ -1,31 +1,47 @@
-"""Evaluation metrics — Eq. (1)-(4) of the paper.
+"""Evaluation metrics — Eq. (1)-(4) of the paper, in edge-cut semantics.
 
 Two implementations, kept deliberately in lock-step (tests assert equality):
 
 * ``*_ref``      — direct, readable transcriptions of the equations operating
-  on :class:`repro.core.ir.NetworkIR` + a cut vector.  These are the oracle.
-* ``evaluate_batch`` — a vectorised jnp version broadcast over a batch of
-  hardware configurations (H) x a batch of fusion groupings (C), so the
+  on :class:`repro.core.ir.GraphIR` (or a chain :class:`repro.core.ir.NetworkIR`,
+  embedded losslessly via :func:`repro.core.ir.as_graph`) + a cut vector.
+  These are the oracle.
+* ``evaluate_batch_graph`` — a vectorised jnp version broadcast over a batch
+  of hardware configurations (H) x a batch of fusion groupings (C), so the
   paper's exhaustive optimisation flow (Sec. II-C) runs as ONE jitted XLA
   program instead of a Python loop over ~5 M candidates.
+  ``evaluate_batch`` is the chain-shaped wrapper kept for the original
+  (L, F) x (C, L-1) call signature.
 
-Grouping representation: a boolean *cut vector* ``cuts`` of length ``L-1``;
-``cuts[i]`` True means a fusion-group boundary between layer ``i`` and
-``i+1``.  Layer-by-layer execution is ``cuts = all True``; whole-network
-fusion is ``all False``.
+Grouping representation: a boolean *cut vector* over the graph's **edges**
+(canonically sorted by ``(src, dst)``).  ``cuts[k]`` True means edge ``k``
+crosses a fusion-group boundary.  The cost model per Eq. (1)-(4):
+
+* a **cut** edge costs DRAM on both ends — the producer writes its output
+  frame once (however many cut consumers it feeds), and each cut consumer
+  reads the edge's ``words`` back;
+* an **internal** (uncut) edge costs only SRAM: the tensor ping-pongs
+  between the on-chip frame buffers and never touches DRAM, but its
+  *pre-pool* frame must fit on chip (Eq. (4) sizing);
+* source nodes always read their input frame from DRAM; sink nodes always
+  write their output frame.
+
+On a chain embedding (edge ``i`` = layer ``i`` -> ``i+1``) this reduces
+exactly to the paper's per-group ``in_first + out_last`` accounting:
+layer-by-layer execution is ``cuts = all True``; whole-network fusion is
+``all False``.  See :mod:`repro.core.ir` for an ASCII picture of a residual
+block's cut space.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .arch import DLAConfig
-from .ir import NetworkIR
+from .ir import GraphIR, NetworkIR, as_graph
 
 # Staging buffer (words) for tiles streamed directly from/to DRAM at group
 # edges — a group's first input and last output never need full-frame SRAM.
@@ -33,7 +49,7 @@ STAGING_WORDS = 4096.0
 
 
 def group_masks(cuts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """(start, end) boolean masks of shape (L,) from a cut vector (L-1,)."""
+    """(start, end) boolean masks of shape (L,) from a chain cut vector (L-1,)."""
     cuts = np.asarray(cuts, dtype=bool)
     L = cuts.shape[0] + 1
     start = np.concatenate([[True], cuts])
@@ -54,63 +70,114 @@ def groups_from_cuts(cuts: np.ndarray) -> list[list[int]]:
     return groups
 
 
+def edge_io_masks(g: GraphIR, cuts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(reads_input, writes_output) node masks of shape (L,) for a cut vector.
+
+    ``reads_input[i]``  — node i streams its *external* input frame from DRAM
+    (only source nodes; cut-edge reads are accounted per edge, not here).
+    ``writes_output[i]`` — node i writes its output frame to DRAM (sink node,
+    or at least one outgoing edge is cut).
+    """
+    cuts = np.asarray(cuts, dtype=bool)
+    if cuts.shape != (g.n_edges,):
+        raise ValueError(f"cut vector shape {cuts.shape} != (E={g.n_edges},)")
+    reads = g.source_mask.copy()
+    writes = g.sink_mask.copy()
+    for k, e in enumerate(g.edges):
+        if cuts[k]:
+            writes[e.src] = True
+    return reads, writes
+
+
 # ---------------------------------------------------------------------------
-# Reference implementations (the paper's equations, verbatim)
+# Reference implementations (the paper's equations in edge-cut form)
 # ---------------------------------------------------------------------------
 
 
-def bandwidth_ref(ir: NetworkIR, cuts: np.ndarray) -> float:
-    """Eq. (1): BW = sum_p { sum_q {N Nkh Nkw M}_Lpq + N Nih Niw + Noh Now M }_Lp."""
-    start, end = group_masks(cuts)
+def bandwidth_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray) -> float:
+    """Eq. (1): BW = sum_p { sum_q {N Nkh Nkw M}_Lpq + N Nih Niw + Noh Now M }_Lp.
+
+    Edge-cut form: every node's weights stream from DRAM; every source node
+    reads its input frame; every cut edge is read back by its consumer; every
+    node with a cut outgoing edge (or no consumer) writes its output frame
+    once.
+    """
+    g = as_graph(ir)
+    cuts = np.asarray(cuts, dtype=bool)
+    reads, writes = edge_io_masks(g, cuts)
     bw = 0.0
-    for i, l in enumerate(ir.layers):
-        bw += l.weight_words  # every layer's weights stream from DRAM
-        if start[i]:
-            bw += l.in_words  # group input frame read
-        if end[i]:
-            bw += l.out_words  # group output frame write
+    for i, n in enumerate(g.nodes):
+        bw += n.weight_words  # every layer's weights stream from DRAM
+        if reads[i]:
+            bw += n.in_words  # external input frame read
+        if writes[i]:
+            bw += n.out_words  # group output frame write
+    for k, e in enumerate(g.edges):
+        if cuts[k]:
+            bw += e.words  # cut tensor read back by the consumer
     return bw
 
 
-def latency_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+def latency_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> float:
     """Eq. (2): L = sum_p { sum_q {t_rd_W + t_PB + t_PL}_Lpq + t_rd_IF + t_wr_OF }_Lp."""
-    start, end = group_masks(cuts)
+    g = as_graph(ir)
+    cuts = np.asarray(cuts, dtype=bool)
+    reads, writes = edge_io_masks(g, cuts)
     lat = 0.0
-    for i, l in enumerate(ir.layers):
-        lat += l.weight_words / hw.dram_words_per_cycle  # t_rd_W
+    for i, n in enumerate(g.nodes):
+        lat += n.weight_words / hw.dram_words_per_cycle  # t_rd_W
         lat += hw.pe_busy_cycles(  # t_PB
-            macs=l.macs,
-            n_in=l.n_in,
-            n_out=l.n_out,
-            kh=l.kh,
-            kw=l.kw,
-            pixels_out=(l.h_in // l.stride) * (l.w_in // l.stride),
+            macs=n.macs,
+            n_in=n.n_in,
+            n_out=n.n_out,
+            kh=n.kh,
+            kw=n.kw,
+            pixels_out=(n.h_in // n.stride) * (n.w_in // n.stride),
         )
         lat += hw.pipeline_latency  # t_PL
-        if start[i]:
-            lat += l.in_words / hw.dram_words_per_cycle  # t_rd_IF
-        if end[i]:
-            lat += l.out_words / hw.dram_words_per_cycle  # t_wr_OF
+        if reads[i]:
+            lat += n.in_words / hw.dram_words_per_cycle  # t_rd_IF
+        if writes[i]:
+            lat += n.out_words / hw.dram_words_per_cycle  # t_wr_OF
+    for k, e in enumerate(g.edges):
+        if cuts[k]:
+            lat += e.words / hw.dram_words_per_cycle  # cut tensor read back
     return lat
 
 
-def sram_accesses_ref(ir: NetworkIR) -> float:
+def sram_accesses_ref(ir: NetworkIR | GraphIR) -> float:
     """C_SRAM: every layer operand passes on-chip SRAM exactly once,
-    independent of grouping (fusion only changes what *also* touches DRAM)."""
-    return float(sum(l.weight_words + l.in_words + l.out_words for l in ir.layers))
+    independent of grouping (fusion only changes what *also* touches DRAM).
+
+    A node's input traffic is max(in_words, sum of incoming edge words):
+    multi-input nodes (ResNet add) stream every fused operand through SRAM
+    even though ``in_words`` describes a single frame, while chain
+    embeddings (one edge carrying exactly ``in_words``) are unchanged.
+    """
+    g = as_graph(ir)
+    in_edge = np.zeros(len(g.nodes))
+    for e in g.edges:
+        in_edge[e.dst] += e.words
+    return float(
+        sum(
+            n.weight_words + max(n.in_words, in_edge[i]) + n.out_words
+            for i, n in enumerate(g.nodes)
+        )
+    )
 
 
-def pe_energy_count_ref(ir: NetworkIR, hw: DLAConfig) -> float:
+def pe_energy_count_ref(ir: NetworkIR | GraphIR, hw: DLAConfig) -> float:
     """C_PE: busy cycles x pe_units (per-PE-cycle or per-block-cycle)."""
+    g = as_graph(ir)
     total = 0.0
-    for l in ir.layers:
+    for n in g.nodes:
         total += hw.pe_busy_cycles(
-            macs=l.macs,
-            n_in=l.n_in,
-            n_out=l.n_out,
-            kh=l.kh,
-            kw=l.kw,
-            pixels_out=(l.h_in // l.stride) * (l.w_in // l.stride),
+            macs=n.macs,
+            n_in=n.n_in,
+            n_out=n.n_out,
+            kh=n.kh,
+            kw=n.kw,
+            pixels_out=(n.h_in // n.stride) * (n.w_in // n.stride),
         )
     return total * hw.pe_units
 
@@ -119,7 +186,7 @@ def pe_energy_count_ref(ir: NetworkIR, hw: DLAConfig) -> float:
 pe_block_cycles_ref = pe_energy_count_ref
 
 
-def energy_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+def energy_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> float:
     """Eq. (3): E = E_DRAM*C_DRAM + E_SRAM*C_SRAM + E_PB*C_PB   [nJ]."""
     c_dram = bandwidth_ref(ir, cuts)
     c_sram = sram_accesses_ref(ir)
@@ -127,25 +194,39 @@ def energy_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
     return hw.e_dram_nj * c_dram + hw.e_sram_nj * c_sram + hw.e_pb_nj * c_pb
 
 
-def buffer_words_ref(ir: NetworkIR, cuts: np.ndarray) -> tuple[float, float, float]:
+def buffer_words_ref(
+    ir: NetworkIR | GraphIR, cuts: np.ndarray
+) -> tuple[float, float, float]:
     """SRAM sizing (IF, W, OF) in words for Eq. (4).
 
     Fused intermediates ping-pong between the input and output frame SRAMs;
-    group-edge tensors stream through small staging buffers.  Weight SRAM
-    holds the largest single layer's kernels.
+    group-edge tensors stream through small staging buffers.  A node's IF
+    SRAM must hold *all* of its internal incoming tensors simultaneously
+    (one per uncut edge); its OF SRAM must hold the **pre-pool** output
+    frame whenever any consumer is fused with it — the inline pool unit
+    (Fig. 1) reduces the frame only on the DRAM write-out path, so a fused
+    consumer sees the full pre-pool intermediate.  Weight SRAM holds the
+    largest single layer's kernels.
     """
-    start, end = group_masks(cuts)
+    g = as_graph(ir)
+    cuts = np.asarray(cuts, dtype=bool)
     if_need, of_need = STAGING_WORDS, STAGING_WORDS
-    for i, l in enumerate(ir.layers):
-        src = STAGING_WORDS if start[i] else float(ir.layers[i].in_words)
-        dst = STAGING_WORDS if end[i] else float(l.out_words)
+    internal_in = np.zeros(len(g.nodes))
+    internal_out = np.zeros(len(g.nodes), dtype=bool)
+    for k, e in enumerate(g.edges):
+        if not cuts[k]:
+            internal_in[e.dst] += e.words
+            internal_out[e.src] = True
+    for i, n in enumerate(g.nodes):
+        src = internal_in[i] if internal_in[i] > 0 else STAGING_WORDS
+        dst = float(n.out_words_prepool) if internal_out[i] else STAGING_WORDS
         if_need = max(if_need, src)
         of_need = max(of_need, dst)
-    w_need = max(float(l.weight_words) for l in ir.layers)
-    return if_need, w_need, of_need
+    w_need = max(float(n.weight_words) for n in g.nodes)
+    return float(if_need), float(w_need), float(of_need)
 
 
-def area_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> float:
+def area_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> float:
     """Eq. (4): A = A_PB + A_IFM + A_WB + A_OFM   [um^2]."""
     if_w, w_w, of_w = buffer_words_ref(ir, cuts)
     return hw.area_um2(if_sram_words=if_w, w_sram_words=w_w, of_sram_words=of_w)
@@ -167,7 +248,7 @@ class Metrics:
         )
 
 
-def evaluate_ref(ir: NetworkIR, cuts: np.ndarray, hw: DLAConfig) -> Metrics:
+def evaluate_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> Metrics:
     return Metrics(
         bandwidth_words=bandwidth_ref(ir, cuts),
         latency_cycles=latency_ref(ir, cuts, hw),
@@ -204,19 +285,30 @@ def _pe_busy_cycles_vec(feat: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(feat[:, F_MACS] > 0, cyc, 0.0)
 
 
-def _evaluate_one(feat: jnp.ndarray, cuts: jnp.ndarray, hw: jnp.ndarray,
-                  area_consts: jnp.ndarray) -> jnp.ndarray:
+def _evaluate_one_graph(
+    feat: jnp.ndarray,  # (L, F)
+    esrc: jnp.ndarray,  # (E,) int
+    edst: jnp.ndarray,  # (E,) int
+    ewords: jnp.ndarray,  # (E,) float
+    src_mask: jnp.ndarray,  # (L,) bool — in-degree 0
+    sink_mask: jnp.ndarray,  # (L,) bool — out-degree 0
+    cuts: jnp.ndarray,  # (E,) bool
+    hw: jnp.ndarray,
+    area_consts: jnp.ndarray,
+) -> jnp.ndarray:
     """Metrics for one (grouping, hw) pair -> (4,) [bw, lat, energy, area]."""
     L = feat.shape[0]
-    start = jnp.concatenate([jnp.ones((1,), bool), cuts])
-    end = jnp.concatenate([cuts, jnp.ones((1,), bool)])
+    cutf = cuts.astype(feat.dtype)
+
+    # Node write mask: sink, or >= 1 cut outgoing edge (scatter-max over src).
+    any_out_cut = jnp.zeros(L, feat.dtype).at[esrc].max(cutf) > 0.5
+    writes = any_out_cut | sink_mask
 
     # Eq. (1)
-    bw = (
-        jnp.sum(feat[:, F_W])
-        + jnp.sum(jnp.where(start, feat[:, F_IN], 0.0))
-        + jnp.sum(jnp.where(end, feat[:, F_OUT], 0.0))
-    )
+    read_src = jnp.sum(jnp.where(src_mask, feat[:, F_IN], 0.0))
+    read_edges = jnp.sum(jnp.where(cuts, ewords, 0.0))
+    write_out = jnp.sum(jnp.where(writes, feat[:, F_OUT], 0.0))
+    bw = jnp.sum(feat[:, F_W]) + read_src + read_edges + write_out
 
     # Eq. (2)
     t_pb = _pe_busy_cycles_vec(feat, hw)
@@ -224,20 +316,29 @@ def _evaluate_one(feat: jnp.ndarray, cuts: jnp.ndarray, hw: jnp.ndarray,
         jnp.sum(feat[:, F_W]) / hw[H_DWPC]
         + jnp.sum(t_pb)
         + L * hw[H_TPL]
-        + jnp.sum(jnp.where(start, feat[:, F_IN], 0.0)) / hw[H_DWPC]
-        + jnp.sum(jnp.where(end, feat[:, F_OUT], 0.0)) / hw[H_DWPC]
+        + (read_src + read_edges) / hw[H_DWPC]
+        + write_out / hw[H_DWPC]
     )
 
-    # Eq. (3)
-    c_sram = jnp.sum(feat[:, F_W] + feat[:, F_IN] + feat[:, F_OUT])
+    # Eq. (3) — per-node input SRAM traffic is max(in_words, incoming edges)
+    # so multi-input nodes count every operand (see sram_accesses_ref).
+    in_edge = jnp.zeros(L, feat.dtype).at[edst].add(ewords)
+    c_sram = jnp.sum(
+        feat[:, F_W] + jnp.maximum(feat[:, F_IN], in_edge) + feat[:, F_OUT]
+    )
     c_pb = jnp.sum(t_pb) * hw[H_PEU]
     energy = hw[H_EDRAM] * bw + hw[H_ESRAM] * c_sram + hw[H_EPB] * c_pb
 
-    # Eq. (4)
-    src = jnp.where(start, STAGING_WORDS, feat[:, F_IN])
-    dst = jnp.where(end, STAGING_WORDS, feat[:, F_OUT])
-    if_need = jnp.maximum(jnp.max(src), STAGING_WORDS)
-    of_need = jnp.maximum(jnp.max(dst), STAGING_WORDS)
+    # Eq. (4): internal incoming tensors coexist in IF SRAM; a node with any
+    # fused consumer holds its *pre-pool* frame in OF SRAM.
+    internal_in = jnp.zeros(L, feat.dtype).at[edst].add(
+        jnp.where(cuts, 0.0, ewords)
+    )
+    any_out_internal = jnp.zeros(L, feat.dtype).at[esrc].max(1.0 - cutf) > 0.5
+    src_need = jnp.where(internal_in > 0, internal_in, STAGING_WORDS)
+    dst_need = jnp.where(any_out_internal, feat[:, F_OUT_PRE], STAGING_WORDS)
+    if_need = jnp.maximum(jnp.max(src_need), STAGING_WORDS)
+    of_need = jnp.maximum(jnp.max(dst_need), STAGING_WORDS)
     w_need = jnp.max(feat[:, F_W])
     a_mult, a_pe_ovh, a_byte, a_ctrl = area_consts
     n_pes = hw[H_F1] * hw[H_F4] * hw[H_F2] * hw[H_F3]
@@ -249,17 +350,64 @@ def _evaluate_one(feat: jnp.ndarray, cuts: jnp.ndarray, hw: jnp.ndarray,
     return jnp.stack([bw, lat, energy, area])
 
 
-@partial(jax.jit, static_argnames=())
-def evaluate_batch(
+@jax.jit
+def evaluate_batch_graph(
     feat: jnp.ndarray,  # (L, F) float
-    cuts_batch: jnp.ndarray,  # (C, L-1) bool
-    hw_rows: jnp.ndarray,  # (H, 10) float
+    esrc: jnp.ndarray,  # (E,) int
+    edst: jnp.ndarray,  # (E,) int
+    ewords: jnp.ndarray,  # (E,) float
+    src_mask: jnp.ndarray,  # (L,) bool
+    sink_mask: jnp.ndarray,  # (L,) bool
+    cuts_batch: jnp.ndarray,  # (C, E) bool
+    hw_rows: jnp.ndarray,  # (H, 11) float
     area_consts: jnp.ndarray,  # (4,) float
 ) -> jnp.ndarray:
     """All metrics for every (hw, grouping) pair -> (H, C, 4)."""
-    per_cut = jax.vmap(_evaluate_one, in_axes=(None, 0, None, None))
-    per_hw = jax.vmap(per_cut, in_axes=(None, None, 0, None))
-    return per_hw(feat, cuts_batch, hw_rows, area_consts)
+    per_cut = jax.vmap(
+        _evaluate_one_graph,
+        in_axes=(None, None, None, None, None, None, 0, None, None),
+    )
+    per_hw = jax.vmap(
+        per_cut, in_axes=(None, None, None, None, None, None, None, 0, None)
+    )
+    return per_hw(
+        feat, esrc, edst, ewords, src_mask, sink_mask, cuts_batch, hw_rows,
+        area_consts,
+    )
+
+
+def chain_edge_arrays(feat: np.ndarray):
+    """(esrc, edst, ewords, src_mask, sink_mask) for a chain's (L, F) features."""
+    L = feat.shape[0]
+    esrc = np.arange(L - 1, dtype=np.int64)
+    edst = np.arange(1, L, dtype=np.int64)
+    ewords = np.asarray(feat[1:, F_IN], dtype=np.float64)
+    src_mask = np.zeros(L, dtype=bool)
+    src_mask[0] = True
+    sink_mask = np.zeros(L, dtype=bool)
+    sink_mask[-1] = True
+    return esrc, edst, ewords, src_mask, sink_mask
+
+
+def evaluate_batch(
+    feat: jnp.ndarray,  # (L, F) float
+    cuts_batch: jnp.ndarray,  # (C, L-1) bool
+    hw_rows: jnp.ndarray,  # (H, 11) float
+    area_consts: jnp.ndarray,  # (4,) float
+) -> jnp.ndarray:
+    """Chain-shaped wrapper around :func:`evaluate_batch_graph` -> (H, C, 4)."""
+    esrc, edst, ewords, src_mask, sink_mask = chain_edge_arrays(np.asarray(feat))
+    return evaluate_batch_graph(
+        jnp.asarray(feat),
+        jnp.asarray(esrc),
+        jnp.asarray(edst),
+        jnp.asarray(ewords),
+        jnp.asarray(src_mask),
+        jnp.asarray(sink_mask),
+        jnp.asarray(cuts_batch),
+        jnp.asarray(hw_rows),
+        jnp.asarray(area_consts),
+    )
 
 
 def area_consts_of(hw: DLAConfig) -> np.ndarray:

@@ -103,14 +103,16 @@ def plan_model(cfg, seq_len: int, spec: TPUSpec = TPU_V5E) -> FusionPlan:
     bm, bf, mlp_b = _plan_mlp(cfg.d_model, max(cfg.d_ff, cfg.d_model), spec)
 
     # Evaluator pass over one transformer block: fused vs layer-by-layer BW.
-    block_ir = IR.transformer_block_ir(
+    # The block chain embeds as a GraphIR so the same edge-cut search that
+    # handles residual DAGs drives kernel selection here (chain DP fast path).
+    block_ir = IR.as_graph(IR.transformer_block_ir(
         name=cfg.name, d_model=cfg.d_model, n_heads=cfg.n_heads,
         n_kv_heads=cfg.n_kv_heads, d_ff=max(cfg.d_ff, 1), seq_len=seq_len,
         ffn_act=cfg.ffn_act, n_experts=cfg.n_experts, top_k=cfg.top_k,
-    )
-    lbl = M.bandwidth_ref(block_ir, fusion.layer_by_layer_cuts(len(block_ir)))
+    ))
+    lbl = M.bandwidth_ref(block_ir, fusion.layer_by_layer_cuts(block_ir))
     # fused grouping: {q,kv} | {qk, pv} (flash) | {o} | {w1/w3, w2} (fused MLP)
-    dp = fusion.optimal_cuts_dp(block_ir)
+    dp = fusion.optimal_cuts(block_ir)
     fused = M.bandwidth_ref(block_ir, dp.cuts)
 
     return FusionPlan(

@@ -1,0 +1,180 @@
+"""DAG fusion search: validity, greedy/beam vs brute-force edge-cut oracle."""
+import numpy as np
+import pytest
+
+from repro.core import fusion, metrics as M
+from repro.core.arch import Constraints, PAPER_OPTIMAL_CONFIG
+from repro.core.flow import compare_fusion, run_flow
+from repro.core.ir import (
+    EdgeSpec, GraphIR, LayerSpec, as_graph, encoder_decoder_ir,
+    residual_block_ir, resnet18_ir, vgg16_ir,
+)
+from test_graph_ir import random_chain, random_dag
+
+RELAXED = Constraints(max_bandwidth_words=1e12, max_latency_cycles=1e12,
+                      max_energy_nj=1e12, max_area_um2=1e12)
+
+
+# ---------------------------------------------------------------------------
+# Cut validity
+# ---------------------------------------------------------------------------
+
+
+def diamond():
+    """0 -> 1 -> 2 with a shortcut 0 -> 2 (the minimal convexity testbed)."""
+    n = [LayerSpec(f"n{i}", "conv", 4, 4, 8, 8, 3, 3, 1) for i in range(3)]
+    e = (EdgeSpec(0, 1, 256), EdgeSpec(1, 2, 256), EdgeSpec(0, 2, 256))
+    return GraphIR("diamond", tuple(n), e)
+
+
+def _cuts_of(g, cut_pairs):
+    """Cut vector in the graph's canonical (sorted) edge order."""
+    return np.asarray([(e.src, e.dst) in cut_pairs for e in g.edges], bool)
+
+
+def test_consistency_rejected():
+    g = diamond()
+    # (0,1) and (1,2) uncut join all three nodes; cutting (0,2) inside that
+    # group is inconsistent.
+    cuts = fusion.cuts_from_labels(g, np.array([0, 0, 0]))
+    assert fusion.is_valid_cuts(g, cuts)
+    assert not fusion.is_valid_cuts(g, _cuts_of(g, {(0, 2)}))
+
+
+def test_convexity_rejected():
+    g = diamond()
+    # Group {0, 2} via the shortcut, with 1 outside: dataflow leaves the
+    # group (0->1) and re-enters (1->2) — the quotient has a 2-cycle.
+    non_convex = _cuts_of(g, {(0, 1), (1, 2)})
+    assert not fusion.is_valid_cuts(g, non_convex)
+    # 5 partitions of a 2-path-diamond are valid: all-cut, all-fused,
+    # {01}{2}, {0}{12}, and {0}{1}{2} == all-cut... enumerated exactly:
+    valid = fusion.enumerate_valid_edge_cuts(g)
+    assert all(fusion.is_valid_cuts(g, c) for c in valid)
+    assert len(valid) == 4  # {0}{1}{2}, {0,1}{2}, {0}{1,2}, {0,1,2}
+
+
+def test_chain_every_cut_vector_valid():
+    rng = np.random.default_rng(0)
+    ir = random_chain(rng, n=5)
+    g = as_graph(ir)
+    valid = fusion.enumerate_valid_edge_cuts(g)
+    assert valid.shape == (2 ** 4, 4)
+    for c in fusion.enumerate_cuts(5):
+        assert fusion.is_valid_cuts(g, c)
+
+
+def test_enumerate_guard():
+    rng = np.random.default_rng(1)
+    g = resnet18_ir()
+    with pytest.raises(ValueError):
+        fusion.enumerate_valid_edge_cuts(g)  # 38 edges
+
+
+# ---------------------------------------------------------------------------
+# Search vs brute force (the acceptance-criterion property)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_beam_matches_bruteforce_on_random_dags(seed):
+    rng = np.random.default_rng(200 + seed)
+    g = random_dag(rng, int(rng.integers(4, 11)))
+    feat = g.node_features()
+    budget = float(np.median(feat[:, M.F_OUT_PRE]))
+    for sram in (float("inf"), budget):
+        bf = fusion.brute_force_min_bw(g, sram_budget_words=sram)
+        beam = fusion.beam_merge_cuts(g, beam_width=32, sram_budget_words=sram)
+        assert beam.group_cost_words == pytest.approx(bf.group_cost_words)
+        assert fusion.is_valid_cuts(g, beam.cuts)
+        assert fusion.graph_max_intermediate(g, beam.cuts) <= sram
+        greedy = fusion.greedy_merge_cuts(g, sram_budget_words=sram)
+        assert fusion.is_valid_cuts(g, greedy.cuts)
+        assert fusion.graph_max_intermediate(g, greedy.cuts) <= sram
+        # Greedy is a heuristic: never better than the oracle, and the beam
+        # (which explores a superset of its states) never worse than greedy.
+        assert greedy.group_cost_words >= bf.group_cost_words - 1e-9
+        assert beam.group_cost_words <= greedy.group_cost_words + 1e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_optimal_cuts_chain_fast_path_matches_dp(seed):
+    rng = np.random.default_rng(300 + seed)
+    ir = random_chain(rng, n=int(rng.integers(3, 8)))
+    budget = float(np.median([l.out_words_prepool for l in ir.layers]))
+    via_graph = fusion.optimal_cuts(as_graph(ir), sram_budget_words=budget)
+    via_dp = fusion.optimal_cuts_dp(ir, sram_budget_words=budget)
+    assert via_graph.group_cost_words == pytest.approx(via_dp.group_cost_words)
+    np.testing.assert_array_equal(via_graph.cuts, via_dp.cuts)
+    bf = fusion.brute_force_min_bw(ir, sram_budget_words=budget)
+    assert via_graph.group_cost_words == pytest.approx(bf.group_cost_words)
+
+
+def test_merging_monotone_bandwidth_on_dags():
+    """Eq. (1) on graphs: fusing two adjacent groups removes >= 1 store+load
+    pair — bandwidth is monotone non-increasing under a valid merge."""
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        g = random_dag(rng, 7)
+        cuts = fusion.layer_by_layer_cuts(g)
+        bw = M.bandwidth_ref(g, cuts)
+        labels = np.arange(len(g.nodes))
+        for e in g.edges:
+            merged = np.where(labels == labels[e.dst], labels[e.src], labels)
+            mcuts = fusion.cuts_from_labels(g, merged)
+            if fusion.is_valid_cuts(g, mcuts):
+                assert M.bandwidth_ref(g, mcuts) < bw
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the acceptance-criterion networks through the full flow
+# ---------------------------------------------------------------------------
+
+
+def test_resnet18_through_flow_and_compare():
+    g = resnet18_ir()
+    res = run_flow(g, config_space=[PAPER_OPTIMAL_CONFIG],
+                   constraints=RELAXED, groupings="search")
+    assert res.n_candidates >= 3
+    assert res.best_metrics.bandwidth_words > 0
+    search = fusion.optimal_cuts(g)
+    cmp = compare_fusion(g, PAPER_OPTIMAL_CONFIG, fused_cuts=search.cuts)
+    assert cmp.bw_reduction > 0.30  # residual fusion saves real bandwidth
+    assert cmp.latency_reduction > 0
+    assert cmp.energy_reduction > 0
+    # The search grouping must beat the paper's pool-boundary policy, which
+    # cannot keep skip tensors on-chip across stage boundaries.
+    pool_cmp = compare_fusion(g, PAPER_OPTIMAL_CONFIG)
+    assert cmp.bw_reduction >= pool_cmp.bw_reduction
+
+
+def test_resnet18_under_sram_budget():
+    g = resnet18_ir()
+    budget = 200_000.0  # words — forces multiple groups
+    res = fusion.optimal_cuts(g, sram_budget_words=budget)
+    assert res.n_groups > 1
+    assert fusion.graph_max_intermediate(g, res.cuts) <= budget
+    assert fusion.is_valid_cuts(g, res.cuts)
+
+
+def test_encoder_decoder_through_flow_and_compare():
+    g = encoder_decoder_ir(d_model=256, n_heads=4, d_ff=512, seq_enc=128,
+                           seq_dec=64)
+    res = run_flow(g, config_space=[PAPER_OPTIMAL_CONFIG],
+                   constraints=RELAXED, groupings="search")
+    assert res.best_metrics.energy_nj > 0
+    cmp = compare_fusion(g, PAPER_OPTIMAL_CONFIG,
+                         fused_cuts=fusion.optimal_cuts(g).cuts)
+    assert cmp.bw_reduction > 0.30  # cross-attention memory stays on-chip
+
+
+def test_flow_explicit_cut_batch_on_graph():
+    rb = residual_block_ir()
+    batch = fusion.enumerate_valid_edge_cuts(rb)
+    res = run_flow(rb, config_space=[PAPER_OPTIMAL_CONFIG],
+                   constraints=RELAXED, groupings=batch)
+    # min-energy == min-bandwidth here (weights fixed): full fusion wins.
+    assert res.best_metrics.bandwidth_words == M.bandwidth_ref(
+        rb, fusion.brute_force_min_bw(rb).cuts
+    )
+    assert res.group_sizes == (4,)

@@ -1,6 +1,9 @@
 """Hypothesis properties for attention masks and ring-buffer positions."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import attention_bias, ring_positions
