@@ -8,12 +8,31 @@ group is a connected component of the uncut subgraph), **consistent**
 dataflow may leave a group and re-enter it; equivalently the quotient graph
 obtained by contracting every group is acyclic).
 
+Every step of the search runs as a *batched array program* over (C, E) cut
+batches — there is no per-candidate Python on any search path:
+
+* component labelling  — min-label propagation + pointer jumping over the
+  whole batch (:func:`repro.core.ir.uncut_component_labels_batch`);
+* validity             — batched consistency + vectorised Kahn peeling of
+  the quotient graphs (:func:`is_valid_cuts_batch`);
+* buffer feasibility   — incidence-matrix segment sums/maxes over
+  ``F_OUT_PRE`` and internal incoming edge words
+  (:func:`graph_max_intermediate_batch`);
+* cost                 — batched Eq. (1) bandwidth
+  (:func:`repro.core.metrics.bandwidth_batch_graph`), plus an O(degree)
+  incremental bandwidth delta for greedy merging.
+
+The scalar functions (``is_valid_cuts``, ``graph_max_intermediate``,
+``bandwidth_ref``, the ``_*_scalar`` search variants) are kept as the
+oracles; tests assert the batched kernels match them bit-for-bit, and
+``benchmarks/bench_search.py`` measures the speedup against them.
+
 Strategies, all returning cut vectors compatible with
 :mod:`repro.core.metrics`:
 
-* ``enumerate_cuts`` / ``enumerate_valid_edge_cuts`` — full enumeration
-  (the paper's predefined-set sweep; fine for VGG-16's 13-18 layers and for
-  DAGs of <= 16 edges).
+* ``enumerate_cuts`` / ``enumerate_valid_edge_cuts`` — full enumeration as
+  a chunked masked pipeline (the paper's predefined-set sweep; chains up to
+  2^20 vectors, DAGs up to ``MAX_EXHAUSTIVE_EDGES`` = 22 edges).
 * ``pool boundary cuts``  — the paper's Sec. III policy (via
   ``GraphIR.pool_boundary_cuts``).
 * ``optimal_cuts_dp``     — O(L^2) chain-partition DP.  Valid because Eq. (1)
@@ -25,7 +44,10 @@ Strategies, all returning cut vectors compatible with
 * ``greedy_merge_cuts`` / ``beam_merge_cuts`` — bottom-up group merging for
   general DAGs (bandwidth is monotone non-increasing under a valid merge,
   so merging is the natural move; the SRAM budget and convexity are what
-  make the problem non-trivial).  Cross-checked against brute force on
+  make the problem non-trivial).  Each round expands the whole frontier
+  into one (M, E) cut batch, dedups it against every previously seen
+  canonical label state, and scores it with one batched validity /
+  feasibility / bandwidth pass.  Cross-checked against brute force on
   random DAGs in tests.
 * ``optimal_cuts`` — dispatch: chain DP fast path, exhaustive enumeration
   for small DAGs, beam search otherwise.
@@ -33,16 +55,30 @@ Strategies, all returning cut vectors compatible with
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Iterator
 
 import numpy as np
 
-from .ir import GraphIR, NetworkIR, as_graph, scc_labels, uncut_component_labels
+from .ir import (
+    GraphIR,
+    NetworkIR,
+    as_graph,
+    canonicalize_labels_batch,
+    quotient_acyclic_batch,
+    scc_labels,
+    uncut_component_labels,
+    _min_label_reps_batch,
+)
 from . import metrics as M
 
 MAX_EXHAUSTIVE_LAYERS = 21  # 2^20 cut vectors ~ 1M candidates (vectorised)
-# DAG enumeration runs a per-pattern Python validity check, so its cap is
-# much lower than the chain cap (2^16 ~ a few seconds; beam covers the rest).
-MAX_EXHAUSTIVE_EDGES = 16
+# DAG enumeration is a chunked masked array pipeline (batch labelling + Kahn
+# peeling), so its cap is within striking distance of the chain cap.
+MAX_EXHAUSTIVE_EDGES = 22
+# Rows per chunk of the enumeration pipeline — bounds peak memory at
+# ~chunk x L for the label/peeling intermediates.
+ENUM_CHUNK_ROWS = 1 << 17
 
 
 def enumerate_cuts(n_layers: int) -> np.ndarray:
@@ -78,7 +114,7 @@ def layer_by_layer_cuts(n_cuts_or_graph) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# DAG cut validity
+# DAG cut validity — scalar oracles
 # ---------------------------------------------------------------------------
 
 
@@ -111,7 +147,8 @@ def is_valid_cuts(g: GraphIR, cuts: np.ndarray) -> bool:
     """A cut vector is valid iff every cut edge crosses two different groups
     (consistency) and every group is convex (quotient graph acyclic).
     Weak connectivity is automatic: groups are components of uncut edges.
-    On a chain every cut vector is valid."""
+    On a chain every cut vector is valid.  Scalar oracle for
+    :func:`is_valid_cuts_batch`."""
     cuts = np.asarray(cuts, dtype=bool)
     labels = cut_group_labels(g, cuts)
     for k, e in enumerate(g.edges):
@@ -128,19 +165,93 @@ def cuts_from_labels(g: GraphIR, labels: np.ndarray) -> np.ndarray:
     )
 
 
-def enumerate_valid_edge_cuts(g: GraphIR) -> np.ndarray:
-    """All valid edge-cut vectors, shape (C, E), dtype bool.
+# ---------------------------------------------------------------------------
+# DAG cut validity — batched kernels
+# ---------------------------------------------------------------------------
+
+
+def is_valid_cuts_batch(
+    g: GraphIR, cuts_batch: np.ndarray, *, labels: np.ndarray | None = None
+) -> np.ndarray:
+    """(C,) bool — batched :func:`is_valid_cuts` with no per-candidate Python.
+
+    Consistency is one masked comparison over the (C, E) batch; convexity is
+    vectorised Kahn peeling of the quotient graphs (only the consistent rows
+    are peeled).  ``labels`` may pass in precomputed component
+    representatives to avoid relabelling.
+    """
+    ga = M.graph_arrays(g)
+    cuts_batch = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    C = cuts_batch.shape[0]
+    if g.is_chain or g.n_edges == 0:
+        return np.ones(C, dtype=bool)
+    if labels is None:
+        labels = _min_label_reps_batch(len(g.nodes), ga.esrc, ga.edst, cuts_batch)
+    lab_s = labels[:, ga.esrc]
+    lab_d = labels[:, ga.edst]
+    ok = ~np.any(cuts_batch & (lab_s == lab_d), axis=1)  # consistency
+    idx = np.flatnonzero(ok)
+    if idx.size:
+        ok[idx] = quotient_acyclic_batch(
+            len(g.nodes), ga.esrc, ga.edst, labels[idx]
+        )
+    return ok
+
+
+def _bit_chunks(n_bits: int, chunk_rows: int) -> Iterator[np.ndarray]:
+    """Yield the 2^n bit patterns (little-endian, ascending) in row chunks."""
+    total = 1 << n_bits
+    shifts = np.arange(n_bits)[None, :]
+    for lo in range(0, total, chunk_rows):
+        idx = np.arange(lo, min(lo + chunk_rows, total), dtype=np.int64)
+        yield ((idx[:, None] >> shifts) & 1).astype(bool)
+
+
+@functools.lru_cache(maxsize=8)
+def enumerate_valid_edge_cuts(
+    g: GraphIR, *, chunk_rows: int = ENUM_CHUNK_ROWS
+) -> np.ndarray:
+    """All valid edge-cut vectors, shape (C, E), dtype bool (read-only).
 
     Chains short-circuit to :func:`enumerate_cuts` (every vector is valid);
-    general DAGs filter the 2^E bit patterns through :func:`is_valid_cuts`.
+    general DAGs push the 2^E bit patterns through the batched validity
+    pipeline in chunks of ``chunk_rows`` (ascending pattern order, so the
+    output ordering is identical to the per-pattern scalar filter).  The
+    result is memoised per graph — the optimisation flow enumerates the
+    same graph many times (prefilter, sweep, brute force) — and returned
+    read-only so a caller cannot poison the cache; index or copy it before
+    mutating.
     """
+    if g.is_chain:
+        out = enumerate_cuts(len(g.nodes))
+    else:
+        E = g.n_edges
+        if E > MAX_EXHAUSTIVE_EDGES:
+            raise ValueError(
+                f"{E} edges -> 2^{E} cut patterns; use beam_merge_cuts"
+            )
+        if E == 0:
+            out = np.zeros((1, 0), dtype=bool)
+        else:
+            out = np.concatenate(
+                [
+                    bits[is_valid_cuts_batch(g, bits)]
+                    for bits in _bit_chunks(E, chunk_rows)
+                ],
+                axis=0,
+            )
+    out.setflags(write=False)
+    return out
+
+
+def _enumerate_valid_edge_cuts_scalar(g: GraphIR) -> np.ndarray:
+    """The PR 1 per-pattern filter — kept as the enumeration oracle and the
+    benchmark baseline (``benchmarks/bench_search.py``)."""
     if g.is_chain:
         return enumerate_cuts(len(g.nodes))
     E = g.n_edges
     if E > MAX_EXHAUSTIVE_EDGES:
-        raise ValueError(
-            f"{E} edges -> 2^{E} cut patterns; use beam_merge_cuts"
-        )
+        raise ValueError(f"{E} edges -> 2^{E} cut patterns; use beam_merge_cuts")
     if E == 0:
         return np.zeros((1, 0), dtype=bool)
     idx = np.arange(2**E, dtype=np.int64)
@@ -169,7 +280,8 @@ def graph_max_intermediate(g: GraphIR, cuts: np.ndarray) -> float:
     """Largest on-chip tensor implied by an edge-cut grouping: the max over
     (a) pre-pool frames of nodes with >= 1 fused consumer and (b) summed
     internal incoming tensors of any node (multi-input nodes hold all fused
-    operands at once)."""
+    operands at once).  Scalar oracle for
+    :func:`graph_max_intermediate_batch`."""
     cuts = np.asarray(cuts, dtype=bool)
     feat = g.node_features()
     internal_in = np.zeros(len(g.nodes))
@@ -180,6 +292,29 @@ def graph_max_intermediate(g: GraphIR, cuts: np.ndarray) -> float:
             internal_out[e.src] = True
     need = np.where(internal_out, feat[:, M.F_OUT_PRE], 0.0)
     return float(max(need.max(initial=0.0), internal_in.max(initial=0.0)))
+
+
+def graph_max_intermediate_batch(g: GraphIR, cuts_batch: np.ndarray) -> np.ndarray:
+    """(C,) batched :func:`graph_max_intermediate` — segment sums/maxes via
+    the cached edge incidence matrices (exact: integer-valued words)."""
+    ga = M.graph_arrays(g)
+    cuts = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    unc = (~cuts).astype(np.float64)
+    internal_in = unc @ ga.win_dst  # (C, L) summed internal incoming words
+    has_internal_out = (unc @ ga.inc_src) > 0.0
+    need = np.where(has_internal_out, ga.feat[None, :, M.F_OUT_PRE], 0.0)
+    return np.maximum(
+        need.max(axis=1, initial=0.0), internal_in.max(axis=1, initial=0.0)
+    )
+
+
+def graph_feasible_mask_batch(
+    g: GraphIR, cuts_batch: np.ndarray, sram_budget_words: float
+) -> np.ndarray:
+    """(C,) bool — graph analog of :func:`feasible_mask_batch`, used by the
+    search strategies and as the SRAM prefilter in
+    :func:`repro.core.flow.run_flow`."""
+    return graph_max_intermediate_batch(g, cuts_batch) <= sram_budget_words
 
 
 def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float) -> bool:
@@ -270,17 +405,82 @@ def _graph_cost(g: GraphIR, cuts: np.ndarray) -> float:
     return M.bandwidth_ref(g, cuts) - float(g.total_weight_words)
 
 
+def _graph_cost_batch(g: GraphIR, cuts_batch: np.ndarray) -> np.ndarray:
+    """(C,) batched :func:`_graph_cost` (exact: integer-valued words)."""
+    return M.bandwidth_batch_graph(g, cuts_batch) - float(g.total_weight_words)
+
+
+def _max_group_size_batch(labels: np.ndarray) -> np.ndarray:
+    """(C,) largest group cardinality per row of a (C, L) label batch."""
+    C, L = labels.shape
+    rows = np.arange(C)
+    cnt = np.zeros((C, L), dtype=np.int16)
+    for i in range(L):
+        cnt[rows, labels[:, i]] += 1
+    return cnt.max(axis=1)
+
+
+@functools.lru_cache(maxsize=8)
+def _exhaustive_tables(g: GraphIR) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-graph (valid cuts, max intermediate, group cost) — every column
+    the exhaustive search filters or ranks on, none of which depends on the
+    SRAM budget, so repeated searches over the same graph reduce to a mask
+    + argmin over these tables."""
+    cuts_all = enumerate_valid_edge_cuts(g)
+    return (
+        cuts_all,
+        graph_max_intermediate_batch(g, cuts_all),
+        _graph_cost_batch(g, cuts_all),
+    )
+
+
 def brute_force_min_bw(
     ir: NetworkIR | GraphIR,
     *,
     sram_budget_words: float = float("inf"),
     max_group_len: int | None = None,
 ) -> DPResult:
-    """Exhaustive min-bandwidth grouping over valid edge cuts (test oracle
-    for the DP and for the greedy/beam DAG searches)."""
+    """Exhaustive min-bandwidth grouping over valid edge cuts.
+
+    One masked array pipeline over the cached per-graph tables: (batched
+    enumeration -> batched feasibility -> batched Eq. (1) cost) once per
+    graph, then a feasibility mask + first-min argmin per call, in
+    ascending pattern order — bit-identical to the scalar per-candidate
+    loop it replaced (``_brute_force_min_bw_scalar``, kept as the test
+    oracle and benchmark baseline).
+    """
+    g = as_graph(ir)
+    cuts_all, max_int, costs_all = _exhaustive_tables(g)
+    feas = max_int <= sram_budget_words
+    if max_group_len is not None and feas.any():
+        ga = M.graph_arrays(g)
+        rows = np.flatnonzero(feas)
+        labels = _min_label_reps_batch(
+            len(g.nodes), ga.esrc, ga.edst, cuts_all[rows]
+        )
+        feas = feas.copy()
+        feas[rows] = _max_group_size_batch(labels) <= max_group_len
+    costs = np.where(feas, costs_all, np.inf)
+    j = int(np.argmin(costs))  # first min == the scalar loop's strict-< scan
+    if not np.isfinite(costs[j]):
+        raise ValueError("no feasible grouping under the SRAM budget")
+    best_cuts = cuts_all[j].copy()
+    n_groups = int(cut_group_labels(g, best_cuts).max()) + 1
+    return DPResult(
+        cuts=best_cuts, group_cost_words=float(costs[j]), n_groups=n_groups
+    )
+
+
+def _brute_force_min_bw_scalar(
+    ir: NetworkIR | GraphIR,
+    *,
+    sram_budget_words: float = float("inf"),
+    max_group_len: int | None = None,
+) -> DPResult:
+    """The PR 1 per-candidate brute force — test oracle / benchmark baseline."""
     g = as_graph(ir)
     best_cost, best_cuts, best_groups = float("inf"), None, 0
-    for cuts in enumerate_valid_edge_cuts(g):
+    for cuts in _enumerate_valid_edge_cuts_scalar(g):
         if graph_max_intermediate(g, cuts) > sram_budget_words:
             continue
         labels = cut_group_labels(g, cuts)
@@ -295,6 +495,239 @@ def brute_force_min_bw(
     if best_cuts is None:
         raise ValueError("no feasible grouping under the SRAM budget")
     return DPResult(cuts=best_cuts, group_cost_words=best_cost, n_groups=best_groups)
+
+
+# ---------------------------------------------------------------------------
+# Merge search (greedy / beam) — batched engine
+# ---------------------------------------------------------------------------
+
+
+def _merge_pairs(
+    esrc: np.ndarray, edst: np.ndarray, labels: np.ndarray
+) -> list[tuple[int, int]]:
+    """Ordered distinct cross-group (a, b) pairs in edge order — the scalar
+    ``_merge_moves`` generation order, so tie-breaking stays bit-identical."""
+    la = labels[esrc]
+    lb = labels[edst]
+    pairs: list[tuple[int, int]] = []
+    tried: set[tuple[int, int]] = set()
+    for k in range(len(esrc)):
+        a, b = int(la[k]), int(lb[k])
+        if a == b or (a, b) in tried:
+            continue
+        tried.add((a, b))
+        pairs.append((a, b))
+    return pairs
+
+
+def _merged_label_batch(
+    labels: np.ndarray, pairs: list[tuple[int, int]]
+) -> np.ndarray:
+    """(M, L) label rows: row m relabels group ``pairs[m][1]`` to
+    ``pairs[m][0]`` (one single-merge child per candidate pair)."""
+    a = np.asarray([p[0] for p in pairs], dtype=labels.dtype)
+    b = np.asarray([p[1] for p in pairs], dtype=labels.dtype)
+    return np.where(labels[None, :] == b[:, None], a[:, None], labels[None, :])
+
+
+def _valid_merge_pairs(
+    ga: M.GraphArrays, labels: np.ndarray
+) -> list[tuple[int, int]]:
+    """The convexity-preserving subset of :func:`_merge_pairs`, in order.
+
+    A merge of groups ``a`` and ``b`` (joined by >= 1 arc a->b of the
+    current acyclic quotient) closes a cycle iff the quotient has a path
+    a ~> b of length >= 2 (the cycle then runs ab -> ... -> ab; conversely
+    any cycle of the merged quotient must pass through the merged node and
+    lifts to such a path — a b ~> a path would already be a cycle).  The
+    reachability matrix of one state's quotient is shared by all of its
+    candidate moves: log2(L) boolean matrix squarings replace a Kahn peel
+    per move.
+    """
+    la = labels[ga.esrc]
+    lb = labels[ga.edst]
+    pairs = _merge_pairs(ga.esrc, ga.edst, labels)
+    if not pairs:
+        return pairs
+    L = len(labels)
+    adj = np.zeros((L, L))
+    cross = la != lb
+    adj[la[cross], lb[cross]] = 1.0
+    reach = adj.copy()
+    hops = 1
+    while hops < L:  # reach: paths of length in [1, 2*hops] each squaring
+        reach = np.minimum(reach + reach @ reach, 1.0)
+        hops *= 2
+    two_plus = adj @ reach  # > 0 iff a path of length >= 2 exists
+    return [p for p in pairs if two_plus[p[0], p[1]] == 0.0]
+
+
+def merge_bandwidth_delta(
+    g: GraphIR, labels: np.ndarray, a: int, b: int
+) -> float:
+    """Exact Eq. (1) bandwidth change from merging groups ``a`` and ``b``.
+
+    Every a<->b edge stops round-tripping DRAM (its consumer read-back
+    disappears), and a producer of such an edge also stops writing its
+    output frame iff it is not a sink and none of its remaining out-edges
+    leave the merged group.  O(boundary degree) per move — the incremental
+    fast path of :func:`greedy_merge_cuts` (lock-step with
+    ``bandwidth_ref`` differences, asserted in tests; exact because all
+    words are integer-valued).
+    """
+    ga = M.graph_arrays(g)
+    la = labels[ga.esrc]
+    lb = labels[ga.edst]
+    cross = ((la == a) & (lb == b)) | ((la == b) & (lb == a))
+    ks = np.flatnonzero(cross)
+    delta = -float(ga.ewords[ks].sum())
+    for i in np.unique(ga.esrc[ks]):
+        if ga.sink_mask[i]:
+            continue  # sinks always write their output frame
+        gd = lb[ga.out_edges[i]]
+        if not np.any((gd != a) & (gd != b)):
+            delta -= float(ga.feat[i, M.F_OUT])
+    return delta
+
+
+def _expand_frontier(
+    g: GraphIR,
+    frontier: list[tuple[float, np.ndarray]],
+    sram_budget_words: float,
+    seen: set[bytes],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray] | None:
+    """One batched expansion round over the whole frontier.
+
+    Generates every valid single-merge child of every frontier state as one
+    (M, L) label batch (frontier order, then edge order — the scalar
+    expansion order), dedups it against ``seen`` (all previously scored
+    canonical states, within and across rounds), then runs ONE batched
+    feasibility + bandwidth pass.  Returns (labels, cuts, costs) for the
+    surviving children in first-occurrence order, or None if there are
+    none.  Consistency holds by construction (child cuts are derived from
+    labels); convexity is filtered per state by :func:`_valid_merge_pairs`.
+    """
+    ga = M.graph_arrays(g)
+    rows = []
+    for _, labels in frontier:
+        pairs = _valid_merge_pairs(ga, labels)
+        if pairs:
+            rows.append(_merged_label_batch(labels, pairs))
+    if not rows:
+        return None
+    merged = np.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
+    keys = canonicalize_labels_batch(merged)
+    fresh = []
+    for i in range(merged.shape[0]):
+        key = keys[i].tobytes()
+        if key not in seen:
+            seen.add(key)
+            fresh.append(i)
+    if not fresh:
+        return None
+    cand = merged[fresh]
+    cuts = cand[:, ga.esrc] != cand[:, ga.edst]
+    ok = graph_feasible_mask_batch(g, cuts, sram_budget_words)
+    if not ok.any():
+        return None
+    cand, cuts = cand[ok], cuts[ok]
+    return cand, cuts, _graph_cost_batch(g, cuts)
+
+
+def greedy_merge_cuts(
+    ir: NetworkIR | GraphIR,
+    *,
+    sram_budget_words: float = float("inf"),
+) -> DPResult:
+    """Greedy bottom-up merging: start layer-by-layer, repeatedly apply the
+    single group merge with the best bandwidth until none improves.
+
+    Each round scores all candidate merges at once: convexity comes from
+    one reachability closure of the quotient (:func:`_valid_merge_pairs`),
+    feasibility from one batched pass, and costs from the O(degree)
+    incremental :func:`merge_bandwidth_delta` fast path (exact, so the
+    trajectory is bit-identical to the scalar rescore-everything
+    implementation)."""
+    g = as_graph(ir)
+    ga = M.graph_arrays(g)
+    labels = np.arange(len(g.nodes))
+    cost = float(
+        _graph_cost_batch(g, (labels[ga.esrc] != labels[ga.edst])[None, :])[0]
+    )
+    while True:
+        pairs = _valid_merge_pairs(ga, labels)
+        if not pairs:
+            break
+        merged = _merged_label_batch(labels, pairs)
+        cuts = merged[:, ga.esrc] != merged[:, ga.edst]
+        ok = graph_feasible_mask_batch(g, cuts, sram_budget_words)
+        if not ok.any():
+            break
+        deltas = np.asarray(
+            [
+                merge_bandwidth_delta(g, labels, a, b) if o else np.inf
+                for (a, b), o in zip(pairs, ok)
+            ]
+        )
+        j = int(np.argmin(deltas))
+        if deltas[j] >= 0.0:
+            break
+        cost, labels = cost + float(deltas[j]), merged[j]
+    labels = cut_group_labels(g, cuts_from_labels(g, labels))
+    return DPResult(
+        cuts=cuts_from_labels(g, labels),
+        group_cost_words=cost,
+        n_groups=int(labels.max()) + 1,
+    )
+
+
+def beam_merge_cuts(
+    ir: NetworkIR | GraphIR,
+    *,
+    beam_width: int = 32,
+    sram_budget_words: float = float("inf"),
+) -> DPResult:
+    """Beam search over merge sequences (greedy with ``beam_width`` frontier
+    states).  Keeps the best state ever visited, so it can only improve on
+    :func:`greedy_merge_cuts` for the same width >= 1.
+
+    Every round expands the whole frontier into one (M, E) cut batch scored
+    by a single batched validity/feasibility/bandwidth pass, and dedups the
+    children against every canonical label state already scored — a state
+    reached by two merge orders is expanded once, not once per path.  (With
+    single-merge moves the group count drops by one per round, so the dedup
+    only ever fires within a round; keeping the ``seen`` set across rounds
+    makes that invariant explicit and guards any future move type that
+    could revisit a partition.)"""
+    g = as_graph(ir)
+    ga = M.graph_arrays(g)
+    start = np.arange(len(g.nodes))
+    start_cost = float(
+        _graph_cost_batch(g, (start[ga.esrc] != start[ga.edst])[None, :])[0]
+    )
+    frontier: list[tuple[float, np.ndarray]] = [(start_cost, start)]
+    best_cost, best_labels = start_cost, start
+    seen: set[bytes] = {canonicalize_labels_batch(start[None, :])[0].tobytes()}
+    while frontier:
+        expanded = _expand_frontier(g, frontier, sram_budget_words, seen)
+        if expanded is None:
+            break
+        cand, _, costs = expanded
+        order = np.argsort(costs, kind="stable")[:beam_width]
+        frontier = [(float(costs[o]), cand[o]) for o in order]
+        if costs[order[0]] < best_cost:
+            best_cost, best_labels = float(costs[order[0]]), cand[order[0]]
+    labels = cut_group_labels(g, cuts_from_labels(g, best_labels))
+    return DPResult(
+        cuts=cuts_from_labels(g, labels),
+        group_cost_words=best_cost,
+        n_groups=int(labels.max()) + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Merge search — the PR 1 scalar implementations (oracles / bench baseline)
+# ---------------------------------------------------------------------------
 
 
 def _merge_moves(
@@ -318,13 +751,11 @@ def _merge_moves(
     return moves
 
 
-def greedy_merge_cuts(
+def _greedy_merge_cuts_scalar(
     ir: NetworkIR | GraphIR,
     *,
     sram_budget_words: float = float("inf"),
 ) -> DPResult:
-    """Greedy bottom-up merging: start layer-by-layer, repeatedly apply the
-    single group merge with the best bandwidth until none improves."""
     g = as_graph(ir)
     labels = np.arange(len(g.nodes))
     cost = _graph_cost(g, cuts_from_labels(g, labels))
@@ -344,15 +775,12 @@ def greedy_merge_cuts(
     )
 
 
-def beam_merge_cuts(
+def _beam_merge_cuts_scalar(
     ir: NetworkIR | GraphIR,
     *,
     beam_width: int = 32,
     sram_budget_words: float = float("inf"),
 ) -> DPResult:
-    """Beam search over merge sequences (greedy with ``beam_width`` frontier
-    states).  Keeps the best state ever visited, so it can only improve on
-    :func:`greedy_merge_cuts` for the same width >= 1."""
     g = as_graph(ir)
     start = np.arange(len(g.nodes))
     start_cost = _graph_cost(g, cuts_from_labels(g, start))
@@ -386,7 +814,8 @@ def optimal_cuts(
     beam_width: int = 32,
 ) -> DPResult:
     """Grouping search dispatch: chain DP fast path; exhaustive enumeration
-    for small DAGs; beam merge otherwise."""
+    for small DAGs (up to ``MAX_EXHAUSTIVE_EDGES`` = 22 edges, batched);
+    beam merge otherwise."""
     g = as_graph(ir)
     if g.is_chain:
         return optimal_cuts_dp(g, sram_budget_words=sram_budget_words)

@@ -537,6 +537,130 @@ def uncut_component_labels(
     return out
 
 
+def _min_label_reps_batch(
+    n_nodes: int,
+    esrc: np.ndarray,
+    edst: np.ndarray,
+    cuts_batch: np.ndarray,
+) -> np.ndarray:
+    """(C, L) component representatives (min node index per component) of the
+    uncut subgraph, for a whole batch of cut vectors at once.
+
+    Min-label propagation: every node starts labelled with its own index;
+    each sweep relaxes every uncut edge to the min of its endpoint labels,
+    then pointer-jumps (``lab <- lab[lab]``, valid because a label is always
+    the index of a node in the same component) until a full sweep changes
+    nothing.  Because node ids are topological, minima flow mostly in edge
+    order and the loop converges in a handful of sweeps.
+    """
+    cuts_batch = np.asarray(cuts_batch, dtype=bool)
+    C = cuts_batch.shape[0]
+    dtype = np.int16 if n_nodes < 2**15 else np.int64
+    lab = np.repeat(np.arange(n_nodes, dtype=dtype)[None, :], max(C, 1), axis=0)
+    E = len(esrc)
+    if E == 0 or C == 0:
+        return lab[:C]
+    uncut = ~cuts_batch
+
+    def relax(k: int) -> None:
+        u = uncut[:, k]
+        ls = lab[:, esrc[k]]
+        ld = lab[:, edst[k]]
+        m = np.minimum(ls, ld)
+        lab[:, esrc[k]] = np.where(u, m, ls)
+        lab[:, edst[k]] = np.where(u, m, ld)
+
+    while True:
+        prev = lab.copy()
+        for k in range(E):  # forward: minima flow with the edge order ...
+            relax(k)
+        for k in range(E - 1, -1, -1):  # ... and backward, against it
+            relax(k)
+        lab = np.take_along_axis(lab, lab, axis=1)
+        if np.array_equal(lab, prev):
+            return lab
+
+
+def canonicalize_labels_batch(labels: np.ndarray) -> np.ndarray:
+    """Relabel every row of a (C, L) label batch to consecutive ints in order
+    of first appearance — the canonical form :func:`uncut_component_labels`
+    returns (and the dedup key the merge searches use)."""
+    labels = np.atleast_2d(np.asarray(labels))
+    C, L = labels.shape
+    if L == 0 or C == 0:
+        return labels.astype(np.int16)
+    rows = np.arange(C)
+    first = np.full((C, L), L, dtype=np.int16)  # first[c, v]: first col of v
+    for i in range(L - 1, -1, -1):
+        first[rows, labels[:, i]] = i
+    fp = np.take_along_axis(first, labels.astype(np.int64), axis=1)
+    is_first = fp == np.arange(L, dtype=np.int16)[None, :]
+    rank = np.cumsum(is_first, axis=1, dtype=np.int16)
+    return np.take_along_axis(rank, fp.astype(np.int64), axis=1) - 1
+
+
+def uncut_component_labels_batch(
+    n_nodes: int, edges: tuple[EdgeSpec, ...], cuts_batch: np.ndarray
+) -> np.ndarray:
+    """Batched :func:`uncut_component_labels`: (C, E) cut batch -> (C, L)
+    canonical group labels, with no per-candidate Python (lock-step with the
+    scalar union-find, asserted in tests)."""
+    cuts_batch = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    esrc = np.asarray([e.src for e in edges], dtype=np.int64)
+    edst = np.asarray([e.dst for e in edges], dtype=np.int64)
+    return canonicalize_labels_batch(
+        _min_label_reps_batch(n_nodes, esrc, edst, cuts_batch)
+    )
+
+
+def quotient_acyclic_batch(
+    n_nodes: int,
+    esrc: np.ndarray,
+    edst: np.ndarray,
+    labels: np.ndarray,
+) -> np.ndarray:
+    """(C,) bool — is each row's group-contracted (quotient) graph acyclic?
+
+    Vectorised Kahn peeling: repeatedly remove every group with no incoming
+    arc from a still-alive group; a row is acyclic iff all groups die.  Rows
+    are compacted out of the working set as soon as they are decided, so the
+    per-iteration cost tracks the undecided population.  ``labels`` may be
+    representatives or canonical labels — any values in [0, n_nodes).
+    """
+    labels = np.atleast_2d(np.asarray(labels))
+    C = labels.shape[0]
+    out = np.ones(C, dtype=bool)
+    E = len(esrc)
+    if E == 0 or C == 0:
+        return out
+    lab_s = labels[:, esrc]  # (C, E) group of each arc tail
+    lab_d = labels[:, edst]
+    cross = lab_s != lab_d
+    ids = np.flatnonzero(cross.any(axis=1))  # rows with >= 1 quotient arc
+    if ids.size == 0:
+        return out
+    lab_s, lab_d, cross = lab_s[ids], lab_d[ids], cross[ids]
+    alive = np.zeros((ids.size, n_nodes), dtype=bool)
+    np.put_along_axis(alive, labels[ids].astype(np.int64), True, axis=1)
+    while ids.size:
+        rows = np.arange(ids.size)
+        in_any = np.zeros((ids.size, n_nodes), dtype=bool)
+        for k in range(E):
+            act = cross[:, k] & alive[rows, lab_s[:, k]]
+            in_any[rows, lab_d[:, k]] |= act
+        removable = alive & ~in_any
+        progressed = removable.any(axis=1)
+        alive &= ~removable
+        alive_left = alive.any(axis=1)
+        out[ids[alive_left & ~progressed]] = False  # stuck -> cyclic
+        keep = alive_left & progressed
+        if not keep.any():
+            return out
+        ids, alive = ids[keep], alive[keep]
+        lab_s, lab_d, cross = lab_s[keep], lab_d[keep], cross[keep]
+    return out
+
+
 def scc_labels(n: int, arcs: set[tuple[int, int]]) -> list[int]:
     """Strongly-connected-component id per vertex (iterative Kosaraju)."""
     adj: list[list[int]] = [[] for _ in range(n)]

@@ -1,0 +1,265 @@
+"""Batched search engine: lock-step with the scalar oracles, bit-identical
+search results vs the preserved PR 1 scalar implementations.
+
+Every batched kernel (labelling, validity, feasibility, bandwidth, merge
+deltas) must equal its scalar oracle exactly — all quantities are
+integer-valued words, so equality is ==, not approx.  The search strategies
+must return bit-identical cut vectors to the scalar path on the named DAG
+builders and on random chains/DAGs, including under SRAM budgets.
+"""
+import numpy as np
+import pytest
+
+from repro.core import fusion, metrics as M
+from repro.core.flow import run_flow
+from repro.core.arch import Constraints, PAPER_OPTIMAL_CONFIG
+from repro.core.ir import (
+    as_graph,
+    encoder_decoder_ir,
+    quotient_acyclic_batch,
+    residual_block_ir,
+    resnet18_ir,
+    uncut_component_labels,
+    uncut_component_labels_batch,
+)
+from test_graph_ir import random_chain, random_dag
+
+RELAXED = Constraints(max_bandwidth_words=1e12, max_latency_cycles=1e12,
+                      max_energy_nj=1e12, max_area_um2=1e12)
+
+
+def _all_patterns(E):
+    idx = np.arange(2**E, dtype=np.int64)
+    return ((idx[:, None] >> np.arange(E)[None, :]) & 1).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Kernel lock-step (batched == scalar oracle, exactly)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batched_kernels_lockstep_on_random_dags(seed):
+    rng = np.random.default_rng(400 + seed)
+    g = random_dag(rng, int(rng.integers(3, 9)))
+    bits = _all_patterns(g.n_edges)
+    # component labelling
+    lab = uncut_component_labels_batch(len(g.nodes), g.edges, bits)
+    for i in range(bits.shape[0]):
+        np.testing.assert_array_equal(
+            lab[i], uncut_component_labels(len(g.nodes), g.edges, bits[i])
+        )
+    # validity (consistency + convexity)
+    got = fusion.is_valid_cuts_batch(g, bits)
+    want = np.asarray([fusion.is_valid_cuts(g, c) for c in bits])
+    np.testing.assert_array_equal(got, want)
+    # convexity alone (vectorised Kahn peeling vs scalar SCC check)
+    acy = quotient_acyclic_batch(
+        len(g.nodes), *g.edge_arrays()[:2], lab
+    )
+    want_acy = np.asarray([fusion._quotient_is_dag(g, row) for row in lab])
+    np.testing.assert_array_equal(acy, want_acy)
+    # buffer feasibility
+    np.testing.assert_array_equal(
+        fusion.graph_max_intermediate_batch(g, bits),
+        np.asarray([fusion.graph_max_intermediate(g, c) for c in bits]),
+    )
+    # Eq. (1) bandwidth
+    np.testing.assert_array_equal(
+        M.bandwidth_batch_graph(g, bits),
+        np.asarray([M.bandwidth_ref(g, c) for c in bits]),
+    )
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_enumeration_identical_to_scalar_filter(seed):
+    rng = np.random.default_rng(500 + seed)
+    g = random_dag(rng, int(rng.integers(3, 10)))
+    np.testing.assert_array_equal(
+        fusion.enumerate_valid_edge_cuts(g),
+        fusion._enumerate_valid_edge_cuts_scalar(g),
+    )
+
+
+def test_merge_delta_equals_bandwidth_difference():
+    rng = np.random.default_rng(42)
+    for _ in range(8):
+        g = random_dag(rng, int(rng.integers(4, 10)))
+        labels = np.arange(len(g.nodes))
+        # walk a few random valid merges, checking the delta at each step
+        for _ in range(len(g.nodes) - 1):
+            ga = M.graph_arrays(g)
+            pairs = fusion._valid_merge_pairs(ga, labels)
+            if not pairs:
+                break
+            a, b = pairs[int(rng.integers(len(pairs)))]
+            before = M.bandwidth_ref(g, fusion.cuts_from_labels(g, labels))
+            merged = np.where(labels == b, a, labels)
+            after = M.bandwidth_ref(g, fusion.cuts_from_labels(g, merged))
+            assert fusion.merge_bandwidth_delta(g, labels, a, b) == after - before
+            labels = merged
+
+
+def test_valid_merge_pairs_match_scalar_convexity_filter():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        g = random_dag(rng, int(rng.integers(4, 10)))
+        labels = np.arange(len(g.nodes))
+        for _ in range(3):
+            ga = M.graph_arrays(g)
+            pairs = fusion._merge_pairs(ga.esrc, ga.edst, labels)
+            want = [
+                (a, b) for a, b in pairs
+                if fusion._quotient_is_dag(g, np.where(labels == b, a, labels))
+            ]
+            assert fusion._valid_merge_pairs(ga, labels) == want
+            if not want:
+                break
+            a, b = want[0]
+            labels = np.where(labels == b, a, labels)
+
+
+# ---------------------------------------------------------------------------
+# Search results bit-identical to the PR 1 scalar path
+# ---------------------------------------------------------------------------
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.cuts, b.cuts)
+    assert a.group_cost_words == b.group_cost_words
+    assert a.n_groups == b.n_groups
+
+
+@pytest.mark.parametrize("sram", [float("inf"), 150_000.0])
+def test_brute_force_bit_identical_residual_block(sram):
+    rb = residual_block_ir()
+    _assert_same(
+        fusion.brute_force_min_bw(rb, sram_budget_words=sram),
+        fusion._brute_force_min_bw_scalar(rb, sram_budget_words=sram),
+    )
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_brute_force_bit_identical_random_chains(seed):
+    rng = np.random.default_rng(600 + seed)
+    ir = random_chain(rng, n=int(rng.integers(3, 8)))
+    budget = float(np.median([l.out_words_prepool for l in ir.layers]))
+    for sram in (float("inf"), budget):
+        _assert_same(
+            fusion.brute_force_min_bw(ir, sram_budget_words=sram),
+            fusion._brute_force_min_bw_scalar(ir, sram_budget_words=sram),
+        )
+    # the dispatch (chain DP) agrees with brute force on cost
+    dp = fusion.optimal_cuts(as_graph(ir), sram_budget_words=budget)
+    bf = fusion.brute_force_min_bw(ir, sram_budget_words=budget)
+    assert dp.group_cost_words == bf.group_cost_words
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_merge_searches_bit_identical_random_dags(seed):
+    rng = np.random.default_rng(700 + seed)
+    g = random_dag(rng, int(rng.integers(4, 11)))
+    feat = g.node_features()
+    budget = float(np.median(feat[:, M.F_OUT_PRE]))
+    for sram in (float("inf"), budget):
+        _assert_same(
+            fusion.greedy_merge_cuts(g, sram_budget_words=sram),
+            fusion._greedy_merge_cuts_scalar(g, sram_budget_words=sram),
+        )
+        _assert_same(
+            fusion.beam_merge_cuts(g, sram_budget_words=sram),
+            fusion._beam_merge_cuts_scalar(g, sram_budget_words=sram),
+        )
+
+
+def test_beam_bit_identical_resnet18():
+    g = resnet18_ir()
+    budget = 200_000.0  # forces a non-trivial multi-group grouping
+    _assert_same(
+        fusion.beam_merge_cuts(g, sram_budget_words=budget),
+        fusion._beam_merge_cuts_scalar(g, sram_budget_words=budget),
+    )
+
+
+def test_beam_bit_identical_encoder_decoder():
+    ed = encoder_decoder_ir(d_model=256, n_heads=4, d_ff=512, seq_enc=128,
+                            seq_dec=64)
+    _assert_same(
+        fusion.beam_merge_cuts(ed),
+        fusion._beam_merge_cuts_scalar(ed),
+    )
+    # optimal_cuts now certifies the optimum exhaustively (21 edges <= 22);
+    # it can only match or beat the beam, and must agree on this graph.
+    opt = fusion.optimal_cuts(ed)
+    beam = fusion.beam_merge_cuts(ed)
+    assert opt.group_cost_words <= beam.group_cost_words
+    np.testing.assert_array_equal(opt.cuts, fusion.brute_force_min_bw(ed).cuts)
+
+
+# ---------------------------------------------------------------------------
+# Caps + flow integration
+# ---------------------------------------------------------------------------
+
+
+def test_exhaustive_edge_cap_raised():
+    assert fusion.MAX_EXHAUSTIVE_EDGES >= 22
+    g = resnet18_ir()
+    with pytest.raises(ValueError):
+        fusion.enumerate_valid_edge_cuts(g)  # 38 edges still out of reach
+
+
+def test_enumerate_cached_and_readonly():
+    rb = residual_block_ir()
+    a = fusion.enumerate_valid_edge_cuts(rb)
+    b = fusion.enumerate_valid_edge_cuts(rb)
+    assert a is b  # memoised per graph
+    assert not a.flags.writeable  # cache cannot be poisoned in place
+    with pytest.raises(ValueError):
+        a[0, 0] = True
+
+
+def test_run_flow_sram_prefilter():
+    rb = residual_block_ir()
+    budget = 150_000.0
+    res = run_flow(rb, config_space=[PAPER_OPTIMAL_CONFIG],
+                   constraints=RELAXED, groupings="exhaustive",
+                   sram_budget_words=budget)
+    n_valid = fusion.enumerate_valid_edge_cuts(rb).shape[0]
+    assert res.n_pruned > 0
+    assert res.n_candidates == n_valid - res.n_pruned
+    assert fusion.graph_max_intermediate(rb, res.best_cuts) <= budget
+    # the surviving optimum == brute force under the same budget
+    bf = fusion.brute_force_min_bw(rb, sram_budget_words=budget)
+    assert res.best_metrics.bandwidth_words == M.bandwidth_ref(rb, bf.cuts)
+
+
+def test_run_flow_search_groupings_respect_sram_budget():
+    """groupings='search' must search *under* the flow's budget — a
+    budget-blind optimum would just be pruned by the prefilter, silently
+    degrading the flow result to layer-by-layer / pool cuts."""
+    g = resnet18_ir()
+    budget = 200_000.0
+    res = run_flow(g, config_space=[PAPER_OPTIMAL_CONFIG], constraints=RELAXED,
+                   groupings="search", sram_budget_words=budget)
+    want = fusion.beam_merge_cuts(g, sram_budget_words=budget)
+    assert res.best_metrics.bandwidth_words == M.bandwidth_ref(g, want.cuts)
+    assert fusion.graph_max_intermediate(g, res.best_cuts) <= budget
+
+
+def test_run_flow_reports_compile_and_sweep_split():
+    from repro.core import flow as flow_mod
+
+    rb = residual_block_ir()
+    flow_mod._COMPILED_SWEEPS.clear()
+    res = run_flow(rb, config_space=[PAPER_OPTIMAL_CONFIG],
+                   constraints=RELAXED, groupings="exhaustive")
+    assert res.compile_seconds > 0.0
+    assert res.sweep_seconds > 0.0
+    assert res.candidates_per_second == pytest.approx(
+        res.n_candidates / res.sweep_seconds
+    )
+    # same shapes again: executable cache hit, no recompilation
+    res2 = run_flow(rb, config_space=[PAPER_OPTIMAL_CONFIG],
+                    constraints=RELAXED, groupings="exhaustive")
+    assert res2.compile_seconds == 0.0
+    assert res2.best_metrics == res.best_metrics
