@@ -39,6 +39,7 @@ metric kernels live in :mod:`repro.core.metrics`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable, Sequence
 
@@ -59,6 +60,13 @@ class LayerSpec:
     are Nih/Niw; ``kh``/``kw`` are Nkh/Nkw; ``h_out``/``w_out`` are Noh/Now.
     ``pool_after`` > 1 means a pooling stage is *absorbed* into this layer's
     write-out path (the DLA's inline ReLU/BN/pool functional unit, Fig. 1).
+    ``groups`` > 1 is a grouped convolution: each output channel contracts
+    only ``n_in / groups`` input channels (depthwise = ``groups == n_in``),
+    which scales the kernel words and MAC count but not the activation
+    frames.  ``ext_in_words`` > 0 is activation traffic streamed from DRAM
+    *regardless of grouping* — operands not covered by any graph edge (a
+    join that consumes the raw network input re-reads it in every
+    grouping, because there is no producer node to fuse with).
     """
 
     name: str
@@ -72,12 +80,21 @@ class LayerSpec:
     stride: int = 1
     pool_after: int = 1
     flops_per_mac: int = 2
+    groups: int = 1
+    ext_in_words: int = 0
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown layer kind {self.kind!r}")
         if min(self.n_in, self.n_out, self.h_in, self.w_in) <= 0:
             raise ValueError(f"non-positive dims in {self.name}")
+        if self.groups < 1 or self.n_in % self.groups or self.n_out % self.groups:
+            raise ValueError(
+                f"{self.name}: groups={self.groups} must divide "
+                f"n_in={self.n_in} and n_out={self.n_out}"
+            )
+        if self.ext_in_words < 0:
+            raise ValueError(f"{self.name}: ext_in_words < 0")
 
     # ---- derived geometry (SAME padding; stride then absorbed pool) --------
     @property
@@ -91,10 +108,15 @@ class LayerSpec:
 
     # ---- paper quantities (in words; the paper uses one word per element) --
     @property
+    def contracted_channels(self) -> int:
+        """Input channels each output channel contracts (N / groups)."""
+        return self.n_in // self.groups
+
+    @property
     def weight_words(self) -> int:
-        """N*Nkh*Nkw*M for weighted layers; 0 for pool/actmul/elementwise."""
+        """(N/groups)*Nkh*Nkw*M for weighted layers; 0 for pool/actmul/elementwise."""
         if self.kind in ("conv", "fc", "matmul"):
-            return self.n_in * self.kh * self.kw * self.n_out
+            return self.contracted_channels * self.kh * self.kw * self.n_out
         return 0
 
     @property
@@ -121,7 +143,7 @@ class LayerSpec:
         if self.kind in ("pool", "elementwise"):
             return 0
         return (
-            self.n_in
+            self.contracted_channels
             * self.kh
             * self.kw
             * self.n_out
@@ -134,15 +156,22 @@ class LayerSpec:
         return self.macs * self.flops_per_mac
 
     def describe(self) -> str:
+        grp = f" g={self.groups}" if self.groups > 1 else ""
         return (
             f"{self.name:12s} {self.kind:5s} N={self.n_in:5d} M={self.n_out:5d} "
-            f"in={self.h_in}x{self.w_in} k={self.kh}x{self.kw}/{self.stride} "
+            f"in={self.h_in}x{self.w_in} k={self.kh}x{self.kw}/{self.stride}{grp} "
             f"pool={self.pool_after} W={self.weight_words} MACs={self.macs}"
         )
 
 
 def _feature_row(l: LayerSpec) -> list[float]:
-    """One feature vector (order = ``NetworkIR.FEATURES``)."""
+    """One feature vector (order = ``NetworkIR.FEATURES``).
+
+    The ``n_in`` column carries the *contracted* channels (N / groups) — the
+    input-parallel extent the PE array actually tiles — so grouped/depthwise
+    convolutions cost the right t_PB in the vectorised kernels, lock-step
+    with the scalar oracles.
+    """
     return [
         l.weight_words,
         l.in_words,
@@ -152,9 +181,10 @@ def _feature_row(l: LayerSpec) -> list[float]:
         1.0 if l.kind == "pool" else 0.0,
         l.kh,
         l.kw,
-        l.n_in,
+        l.contracted_channels,
         l.n_out,
         (l.h_in // l.stride) * (l.w_in // l.stride),
+        l.ext_in_words,
     ]
 
 
@@ -196,6 +226,7 @@ class NetworkIR:
         "n_in",
         "n_out",
         "pixels_out",
+        "ext_in_words",
     )
 
     def feature_matrix(self) -> np.ndarray:
@@ -238,8 +269,15 @@ VGG16_CONV_PLAN = (
 )
 
 
+@functools.lru_cache(maxsize=None)
 def vgg16_ir(*, pool_mode: str = "separate", include_fc: bool = False) -> NetworkIR:
     """VGG-16 feature extractor as used in the paper's Sec. III experiment.
+
+    A thin wrapper over the tracing frontend: the chain is traced from the
+    real JAX model (:mod:`repro.models.vgg`) by
+    :func:`repro.core.frontend.vgg16_network` — locked layer-identical to a
+    verbatim transcription of the original hand-built plan in
+    ``tests/test_frontend.py``.
 
     pool_mode:
       * ``"separate"``  — pooling layers are standalone layers (the naive
@@ -247,29 +285,12 @@ def vgg16_ir(*, pool_mode: str = "separate", include_fc: bool = False) -> Networ
         them into the group).  This is the accounting that reproduces the
         paper's 55.6 % bandwidth-reduction number.
       * ``"absorbed"``  — pooling runs inside the producing conv's functional
-        unit even in layer-by-layer mode (no standalone pool layers).
+        unit even in layer-by-layer mode (no standalone pool layers; the
+        frontend folds each window == stride pool into its producer).
     """
-    if pool_mode not in ("separate", "absorbed"):
-        raise ValueError(pool_mode)
-    layers: list[LayerSpec] = []
-    for name, n_in, n_out, hw, pooled in VGG16_CONV_PLAN:
-        if pooled and pool_mode == "absorbed":
-            layers.append(
-                LayerSpec(name, "conv", n_in, n_out, hw, hw, 3, 3, 1, pool_after=2)
-            )
-        else:
-            layers.append(LayerSpec(name, "conv", n_in, n_out, hw, hw, 3, 3, 1))
-            if pooled:
-                layers.append(
-                    LayerSpec(
-                        f"pool{name[4]}", "pool", n_out, n_out, hw, hw, 2, 2, 2
-                    )
-                )
-    if include_fc:
-        layers.append(LayerSpec("fc6", "fc", 512 * 7 * 7, 4096, 1, 1))
-        layers.append(LayerSpec("fc7", "fc", 4096, 4096, 1, 1))
-        layers.append(LayerSpec("fc8", "fc", 4096, 1000, 1, 1))
-    return NetworkIR("vgg16", tuple(layers))
+    from .frontend import vgg16_network
+
+    return vgg16_network(pool_mode=pool_mode, include_fc=include_fc)
 
 
 def transformer_block_ir(
@@ -773,8 +794,16 @@ RESNET18_STAGE_PLAN = (
 )
 
 
+@functools.lru_cache(maxsize=None)
 def resnet18_ir(*, input_hw: int = 224) -> GraphIR:
     """ResNet-18 as a residual DAG (He et al., 2016; ImageNet geometry).
+
+    A thin wrapper over the tracing frontend: the DAG is traced from the
+    real JAX model (:mod:`repro.models.resnet`) by
+    :func:`repro.core.frontend.resnet18_graph`, which recovers every skip
+    edge from the jaxpr's use-def chains — locked node-and-edge-identical
+    to a verbatim transcription of the original hand-built DAG in
+    ``tests/test_frontend.py``.
 
     Each basic block is ``conv3x3 -> conv3x3 -> add`` with a skip edge from
     the block input to the add node; stride-2 blocks project the skip
@@ -782,61 +811,9 @@ def resnet18_ir(*, input_hw: int = 224) -> GraphIR:
     not represent: fusing a whole block keeps the skip tensor on-chip,
     which the edge-cut metrics reward with one saved store+load pair.
     """
-    nodes: list[LayerSpec] = []
-    edges: list[EdgeSpec] = []
+    from .frontend import resnet18_graph
 
-    def add_node(spec: LayerSpec) -> int:
-        nodes.append(spec)
-        return len(nodes) - 1
-
-    def connect(src: int, dst: int, words: int | None = None):
-        edges.append(EdgeSpec(src, dst, nodes[src].out_words if words is None else words))
-
-    conv1 = add_node(LayerSpec("conv1", "conv", 3, 64, input_hw, input_hw, 7, 7, 2))
-    pool1 = add_node(
-        LayerSpec("pool1", "pool", 64, 64, input_hw // 2, input_hw // 2, 3, 3, 2)
-    )
-    connect(conv1, pool1)
-    cur = pool1
-    c_in = 64
-    hw_cur = input_hw // 4  # after conv1 (stride 2) + pool1 (stride 2)
-    for stage, n_blocks, c_out, stride0 in RESNET18_STAGE_PLAN:
-        for b in range(n_blocks):
-            stride = stride0 if b == 0 else 1
-            cin_blk = c_in if b == 0 else c_out
-            tag = f"s{stage}b{b}"
-            ca = add_node(
-                LayerSpec(f"{tag}.conv_a", "conv", cin_blk, c_out, hw_cur, hw_cur, 3, 3, stride)
-            )
-            connect(cur, ca)
-            hw_out = hw_cur // stride
-            cb = add_node(
-                LayerSpec(f"{tag}.conv_b", "conv", c_out, c_out, hw_out, hw_out, 3, 3, 1)
-            )
-            connect(ca, cb)
-            if stride != 1 or cin_blk != c_out:
-                ds = add_node(
-                    LayerSpec(f"{tag}.downsample", "conv", cin_blk, c_out, hw_cur, hw_cur, 1, 1, stride)
-                )
-                connect(cur, ds)
-                skip = ds
-            else:
-                skip = cur
-            add = add_node(
-                LayerSpec(f"{tag}.add", "elementwise", c_out, c_out, hw_out, hw_out)
-            )
-            connect(cb, add)
-            connect(skip, add)  # the residual edge a chain IR cannot express
-            cur = add
-            hw_cur = hw_out
-        c_in = c_out
-    gap = add_node(
-        LayerSpec("avgpool", "pool", 512, 512, hw_cur, hw_cur, hw_cur, hw_cur, hw_cur)
-    )
-    connect(cur, gap)
-    fc = add_node(LayerSpec("fc", "fc", 512, 1000, 1, 1))
-    connect(gap, fc)
-    return GraphIR("resnet18", tuple(nodes), tuple(edges))
+    return resnet18_graph(input_hw=input_hw)
 
 
 def residual_block_ir(

@@ -98,9 +98,10 @@ def bandwidth_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray) -> float:
     """Eq. (1): BW = sum_p { sum_q {N Nkh Nkw M}_Lpq + N Nih Niw + Noh Now M }_Lp.
 
     Edge-cut form: every node's weights stream from DRAM; every source node
-    reads its input frame; every cut edge is read back by its consumer; every
-    node with a cut outgoing edge (or no consumer) writes its output frame
-    once.
+    reads its input frame (plus any node's ``ext_in_words`` — edge-less
+    operands re-read in every grouping); every cut edge is read back by its
+    consumer; every node with a cut outgoing edge (or no consumer) writes
+    its output frame once.
     """
     g = as_graph(ir)
     cuts = np.asarray(cuts, dtype=bool)
@@ -108,6 +109,7 @@ def bandwidth_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray) -> float:
     bw = 0.0
     for i, n in enumerate(g.nodes):
         bw += n.weight_words  # every layer's weights stream from DRAM
+        bw += n.ext_in_words  # edge-less activation operands (always DRAM)
         if reads[i]:
             bw += n.in_words  # external input frame read
         if writes[i]:
@@ -128,13 +130,14 @@ def latency_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> flo
         lat += n.weight_words / hw.dram_words_per_cycle  # t_rd_W
         lat += hw.pe_busy_cycles(  # t_PB
             macs=n.macs,
-            n_in=n.n_in,
+            n_in=n.contracted_channels,
             n_out=n.n_out,
             kh=n.kh,
             kw=n.kw,
             pixels_out=(n.h_in // n.stride) * (n.w_in // n.stride),
         )
         lat += hw.pipeline_latency  # t_PL
+        lat += n.ext_in_words / hw.dram_words_per_cycle
         if reads[i]:
             lat += n.in_words / hw.dram_words_per_cycle  # t_rd_IF
         if writes[i]:
@@ -149,10 +152,11 @@ def sram_accesses_ref(ir: NetworkIR | GraphIR) -> float:
     """C_SRAM: every layer operand passes on-chip SRAM exactly once,
     independent of grouping (fusion only changes what *also* touches DRAM).
 
-    A node's input traffic is max(in_words, sum of incoming edge words):
-    multi-input nodes (ResNet add) stream every fused operand through SRAM
-    even though ``in_words`` describes a single frame, while chain
-    embeddings (one edge carrying exactly ``in_words``) are unchanged.
+    A node's input traffic is max(in_words, sum of incoming edge words +
+    edge-less ``ext_in_words``): multi-input nodes (ResNet add) stream
+    every fused operand through SRAM even though ``in_words`` describes a
+    single frame, while chain embeddings (one edge carrying exactly
+    ``in_words``) are unchanged.
     """
     g = as_graph(ir)
     in_edge = np.zeros(len(g.nodes))
@@ -160,7 +164,9 @@ def sram_accesses_ref(ir: NetworkIR | GraphIR) -> float:
         in_edge[e.dst] += e.words
     return float(
         sum(
-            n.weight_words + max(n.in_words, in_edge[i]) + n.out_words
+            n.weight_words
+            + max(n.in_words, in_edge[i] + n.ext_in_words)
+            + n.out_words
             for i, n in enumerate(g.nodes)
         )
     )
@@ -173,7 +179,7 @@ def pe_energy_count_ref(ir: NetworkIR | GraphIR, hw: DLAConfig) -> float:
     for n in g.nodes:
         total += hw.pe_busy_cycles(
             macs=n.macs,
-            n_in=n.n_in,
+            n_in=n.contracted_channels,
             n_out=n.n_out,
             kh=n.kh,
             kw=n.kw,
@@ -301,7 +307,9 @@ def graph_arrays(g: GraphIR) -> GraphArrays:
     win_dst[np.arange(E), edst] = ewords
     out_edges = tuple(np.flatnonzero(esrc == i) for i in range(L))
     src_mask, sink_mask = g.source_mask, g.sink_mask
-    base_bw = float(feat[:, F_W].sum() + feat[src_mask, F_IN].sum())
+    base_bw = float(
+        feat[:, F_W].sum() + feat[:, F_EXT].sum() + feat[src_mask, F_IN].sum()
+    )
     ga = GraphArrays(
         feat=feat, esrc=esrc, edst=edst, ewords=ewords, src_mask=src_mask,
         sink_mask=sink_mask, inc_src=inc_src, win_dst=win_dst,
@@ -329,7 +337,8 @@ def bandwidth_batch_graph(
     )
 
 # Feature column indices (must match NetworkIR.FEATURES order).
-F_W, F_IN, F_OUT, F_OUT_PRE, F_MACS, F_ISPOOL, F_KH, F_KW, F_NIN, F_NOUT, F_PIX = range(11)
+(F_W, F_IN, F_OUT, F_OUT_PRE, F_MACS, F_ISPOOL, F_KH, F_KW, F_NIN, F_NOUT,
+ F_PIX, F_EXT) = range(12)
 # HW row indices (must match DLAConfig.ROW_FIELDS order).
 (H_F1, H_F2, H_F3, H_F4, H_MPP, H_DWPC, H_TPL, H_EDRAM, H_ESRAM, H_EPB,
  H_PEU) = range(11)
@@ -371,8 +380,10 @@ def _evaluate_one_graph(
     any_out_cut = jnp.zeros(L, feat.dtype).at[esrc].max(cutf) > 0.5
     writes = any_out_cut | sink_mask
 
-    # Eq. (1)
-    read_src = jnp.sum(jnp.where(src_mask, feat[:, F_IN], 0.0))
+    # Eq. (1) — ext_in_words are edge-less operands, read in every grouping
+    read_src = jnp.sum(jnp.where(src_mask, feat[:, F_IN], 0.0)) + jnp.sum(
+        feat[:, F_EXT]
+    )
     read_edges = jnp.sum(jnp.where(cuts, ewords, 0.0))
     write_out = jnp.sum(jnp.where(writes, feat[:, F_OUT], 0.0))
     bw = jnp.sum(feat[:, F_W]) + read_src + read_edges + write_out
@@ -391,7 +402,9 @@ def _evaluate_one_graph(
     # so multi-input nodes count every operand (see sram_accesses_ref).
     in_edge = jnp.zeros(L, feat.dtype).at[edst].add(ewords)
     c_sram = jnp.sum(
-        feat[:, F_W] + jnp.maximum(feat[:, F_IN], in_edge) + feat[:, F_OUT]
+        feat[:, F_W]
+        + jnp.maximum(feat[:, F_IN], in_edge + feat[:, F_EXT])
+        + feat[:, F_OUT]
     )
     c_pb = jnp.sum(t_pb) * hw[H_PEU]
     energy = hw[H_EDRAM] * bw + hw[H_ESRAM] * c_sram + hw[H_EPB] * c_pb

@@ -1,1 +1,7 @@
-"""Model definitions (pure-functional JAX, pytree params)."""
+"""Model definitions (pure-functional JAX, pytree params).
+
+``vgg``, ``resnet`` and ``mobilenet`` double as evaluator workloads: their
+``forward`` functions are traced into :class:`repro.core.ir.GraphIR` by
+:mod:`repro.core.frontend` (each provides ``param_specs()`` — a
+``jax.ShapeDtypeStruct`` pytree — so tracing materialises nothing).
+"""

@@ -1,0 +1,73 @@
+"""MobileNet-style inverted-residual stack (Sandler et al., 2018) in JAX.
+
+The depthwise 3x3 convolutions (``feature_group_count == channels``) and
+the linear-bottleneck skip adds make this the canonical beyond-3x3-conv
+workload for the evaluator: the frontend traces :func:`forward` into a
+:class:`repro.core.ir.GraphIR` whose depthwise nodes carry
+``LayerSpec.groups`` and whose stride-1 blocks contribute residual joins
+(``repro.core.frontend.mobilenet_graph``).
+
+``MOBILENET_PLAN`` rows are ``(c_in, c_out, stride, expand)``; ``expand ==
+1`` blocks skip the expansion 1x1 (MobileNet-v2's first bottleneck), and a
+block has an identity skip iff ``stride == 1 and c_in == c_out``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# (c_in, c_out, stride, expand) — a v2-style truncation: stem 3->32 /2,
+# then bottlenecks through two stride-2 stages with stride-1 skips.
+MOBILENET_PLAN = (
+    (32, 16, 1, 1),
+    (16, 24, 2, 4),
+    (24, 24, 1, 4),
+    (24, 32, 2, 4),
+    (32, 32, 1, 4),
+)
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(jnp.maximum(x, 0.0), 6.0)
+
+
+def _conv(x, w, stride: int, *, groups: int = 1) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def param_specs(*, plan=MOBILENET_PLAN, dtype=jnp.float32) -> dict:
+    """``jax.ShapeDtypeStruct`` pytree for tracing (nothing materialised)."""
+    sds = lambda *s: jax.ShapeDtypeStruct(tuple(s), dtype)
+    stem_out = plan[0][0]
+    blocks = []
+    for c_in, c_out, _stride, expand in plan:
+        hidden = c_in * expand
+        p = {}
+        if expand != 1:
+            p["we"] = sds(1, 1, c_in, hidden)
+            p["be"] = sds(hidden)
+        p["wd"] = sds(3, 3, 1, hidden)  # depthwise: one kernel per channel
+        p["bd"] = sds(hidden)
+        p["wp"] = sds(1, 1, hidden, c_out)
+        p["bp"] = sds(c_out)
+        blocks.append(p)
+    return {"stem": {"w": sds(3, 3, 3, stem_out), "b": sds(stem_out)},
+            "blocks": blocks}
+
+
+def forward(params: dict, x: jnp.ndarray, *, plan=MOBILENET_PLAN) -> jnp.ndarray:
+    """x: (B, H, W, 3) -> features (B, H', W', c_out_last)."""
+    x = relu6(_conv(x, params["stem"]["w"], 2) + params["stem"]["b"])
+    for p, (c_in, c_out, stride, expand) in zip(params["blocks"], plan):
+        h = x
+        if expand != 1:
+            h = relu6(_conv(h, p["we"], 1) + p["be"])
+        hidden = c_in * expand
+        h = relu6(_conv(h, p["wd"], stride, groups=hidden) + p["bd"])
+        h = _conv(h, p["wp"], 1) + p["bp"]  # linear bottleneck
+        x = x + h if (stride == 1 and c_in == c_out) else h
+    return x

@@ -34,6 +34,25 @@ def init_params(key, *, in_hw: int = 224, n_classes: int = 1000,
     return {"convs": convs, "fcs": fcs}
 
 
+def param_specs(*, in_hw: int = 224, n_classes: int = 1000,
+                dtype=jnp.float32) -> dict:
+    """``jax.ShapeDtypeStruct`` pytree mirroring :func:`init_params` — lets
+    the evaluator frontend trace :func:`forward` without materialising the
+    ~135M VGG-16 parameters."""
+    sds = lambda *s: jax.ShapeDtypeStruct(tuple(s), dtype)
+    convs = [
+        {"w": sds(3, 3, n_in, n_out), "b": sds(n_out)}
+        for _name, n_in, n_out, _hw, _pooled in VGG16_CONV_PLAN
+    ]
+    s = in_hw // 32
+    fcs = [
+        {"w": sds(512 * s * s, 4096), "b": sds(4096)},
+        {"w": sds(4096, 4096), "b": sds(4096)},
+        {"w": sds(4096, n_classes), "b": sds(n_classes)},
+    ]
+    return {"convs": convs, "fcs": fcs}
+
+
 def max_pool_2x2(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"

@@ -1,0 +1,303 @@
+"""Op-model coverage beyond 3x3 convs: oracle vs batched kernel lock-step.
+
+The tracer emits depthwise/grouped convs (``LayerSpec.groups``), 1x1 /
+pointwise and K x K != 3 kernels, and ``dot_general`` as the degenerate 1x1
+convolution.  Eq. (1)-(4) must cost all of them identically in the scalar
+``*_ref`` oracles and the vmapped batch kernel — the same lock-step
+discipline the chain refactor established.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frontend as F
+from repro.core import fusion, metrics as M
+from repro.core.arch import DLAConfig
+from repro.core.ir import EdgeSpec, GraphIR, LayerSpec, graph_ir
+
+HWS = [DLAConfig("hsiao", 4, 4, 4, 4), DLAConfig("vwa", 8, 8, 3, 8)]
+
+
+def _mixed_op_graph() -> GraphIR:
+    """Stem -> {depthwise 3x3, pointwise 1x1, 5x5, 7x7} -> join -> matmul/fc:
+    one graph exercising every newly covered operator."""
+    nodes = (
+        LayerSpec("stem", "conv", 8, 32, 16, 16, 3, 3, 1),
+        LayerSpec("dw", "conv", 32, 32, 16, 16, 3, 3, 1, groups=32),
+        LayerSpec("pw", "conv", 32, 32, 16, 16, 1, 1, 1),
+        LayerSpec("k5", "conv", 32, 32, 16, 16, 5, 5, 1),
+        LayerSpec("join", "elementwise", 32, 32, 16, 16),
+        LayerSpec("k7", "conv", 32, 16, 16, 16, 7, 7, 2, groups=4),
+        LayerSpec("mm", "matmul", 16 * 8 * 8, 64, 1, 1),
+        LayerSpec("fc", "fc", 64, 10, 1, 1),
+    )
+    edges = (
+        (0, 1), (1, 2), (1, 3), (2, 4), (3, 4), (4, 5),
+        (5, 6, 16 * 8 * 8), (6, 7),
+    )
+    return graph_ir("mixed_ops", nodes, edges)
+
+
+def test_grouped_layerspec_quantities():
+    dw = LayerSpec("dw", "conv", 32, 32, 16, 16, 3, 3, 1, groups=32)
+    assert dw.contracted_channels == 1
+    assert dw.weight_words == 3 * 3 * 32  # one kernel per channel
+    assert dw.macs == 1 * 3 * 3 * 32 * 16 * 16
+    g4 = LayerSpec("g4", "conv", 32, 16, 16, 16, 7, 7, 2, groups=4)
+    assert g4.contracted_channels == 8
+    assert g4.weight_words == 8 * 7 * 7 * 16
+    assert g4.macs == 8 * 7 * 7 * 16 * 8 * 8
+    # activation frames are untouched by grouping
+    dense = LayerSpec("d", "conv", 32, 32, 16, 16, 3, 3, 1)
+    assert dw.in_words == dense.in_words and dw.out_words == dense.out_words
+
+
+def test_groups_must_divide_channels():
+    with pytest.raises(ValueError, match="groups"):
+        LayerSpec("bad", "conv", 30, 32, 16, 16, 3, 3, 1, groups=4)
+    with pytest.raises(ValueError, match="groups"):
+        LayerSpec("bad", "conv", 32, 30, 16, 16, 3, 3, 1, groups=4)
+
+
+def test_depthwise_latency_oracle_formula():
+    """latency_ref must tile t_PB over the *contracted* channels."""
+    g = graph_ir(
+        "dw1",
+        (LayerSpec("dw", "conv", 32, 32, 16, 16, 3, 3, 1, groups=32),),
+        (),
+    )
+    hw = HWS[0]
+    cuts = np.zeros(0, dtype=bool)
+    expected_tpb = (
+        math.ceil(32 / hw.f1) * math.ceil(1 / hw.f4)
+        * math.ceil(256 / (hw.f2 * hw.f3)) * math.ceil(9 / 9)
+    )
+    n = g.nodes[0]
+    io = (n.weight_words + n.in_words + n.out_words) / hw.dram_words_per_cycle
+    assert M.latency_ref(g, cuts, hw) == expected_tpb + hw.pipeline_latency + io
+
+
+@pytest.mark.parametrize("hw", HWS, ids=lambda h: h.style)
+def test_mixed_ops_oracle_vs_batch_lockstep(hw):
+    g = _mixed_op_graph()
+    cuts_batch = fusion.enumerate_valid_edge_cuts(g)
+    # bandwidth: numpy batch kernel, exact equality
+    bw = M.bandwidth_batch_graph(g, cuts_batch)
+    for i in range(cuts_batch.shape[0]):
+        assert bw[i] == M.bandwidth_ref(g, cuts_batch[i])
+    # all four metrics: jitted vmapped kernel vs scalar oracle
+    esrc, edst, ewords = g.edge_arrays()
+    out = np.asarray(
+        M.evaluate_batch_graph(
+            jnp.asarray(g.node_features()), jnp.asarray(esrc), jnp.asarray(edst),
+            jnp.asarray(ewords), jnp.asarray(g.source_mask),
+            jnp.asarray(g.sink_mask), jnp.asarray(cuts_batch),
+            jnp.asarray(np.stack([hw.as_row()])),
+            jnp.asarray(M.area_consts_of(hw)),
+        )
+    )
+    for ci in range(0, cuts_batch.shape[0], 7):
+        ref = M.evaluate_ref(g, cuts_batch[ci], hw)
+        np.testing.assert_allclose(out[0, ci, 0], ref.bandwidth_words, rtol=1e-6)
+        np.testing.assert_allclose(out[0, ci, 1], ref.latency_cycles, rtol=1e-6)
+        np.testing.assert_allclose(out[0, ci, 2], ref.energy_nj, rtol=1e-6)
+        np.testing.assert_allclose(out[0, ci, 3], ref.area_um2, rtol=1e-6)
+
+
+def test_mixed_ops_search_batched_equals_scalar():
+    g = _mixed_op_graph()
+    best = fusion.brute_force_min_bw(g)
+    best_scalar = fusion._brute_force_min_bw_scalar(g)
+    np.testing.assert_array_equal(best.cuts, best_scalar.cuts)
+    greedy = fusion.greedy_merge_cuts(g)
+    greedy_scalar = fusion._greedy_merge_cuts_scalar(g)
+    np.testing.assert_array_equal(greedy.cuts, greedy_scalar.cuts)
+
+
+# ---------------------------------------------------------------------------
+# Traced primitives land on the right LayerSpec
+# ---------------------------------------------------------------------------
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def test_traced_depthwise_conv_sets_groups():
+    def fn(w, x):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=16,
+        )
+
+    g = F.trace(fn, _sds(3, 3, 1, 16), _sds(1, 8, 8, 16))
+    (n,) = g.nodes
+    assert n == LayerSpec(n.name, "conv", 16, 16, 8, 8, 3, 3, 1, groups=16)
+
+
+@pytest.mark.parametrize("k", [1, 5, 7])
+def test_traced_kxk_conv(k):
+    def fn(w, x):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+
+    g = F.trace(fn, _sds(k, k, 8, 4), _sds(1, 16, 16, 8))
+    (n,) = g.nodes
+    assert (n.kh, n.kw, n.n_in, n.n_out) == (k, k, 8, 4)
+    assert n.macs == 8 * k * k * 4 * 16 * 16
+
+
+def test_traced_dot_general_is_degenerate_conv():
+    """A matmul over ``seq`` pixels is the 1x1-conv degenerate case — the
+    traced LayerSpec must match the transformer builders' encoding."""
+    g = F.trace(lambda w, x: x @ w, _sds(256, 512), _sds(128, 256))
+    (n,) = g.nodes
+    assert n == LayerSpec(n.name, "matmul", 256, 512, 128, 1)
+    assert n.macs == 256 * 512 * 128
+    assert n.weight_words == 256 * 512
+
+
+def test_traced_single_pixel_dot_general_is_fc():
+    g = F.trace(lambda w, x: x @ w, _sds(256, 10), _sds(1, 256))
+    (n,) = g.nodes
+    assert n == LayerSpec(n.name, "fc", 256, 10, 1, 1)
+
+
+def test_traced_activation_activation_dot_general_is_actmul():
+    """Both operands activations (attention QK^T): the kernel-side tensor
+    counts as input traffic, mirroring the hand-built ``actmul`` layers."""
+
+    def fn(_w, xs):
+        q, k = xs
+        return q @ k.T
+
+    g = F.trace(fn, _sds(1,), (_sds(64, 32), _sds(64, 32)))
+    (n,) = g.nodes
+    assert n.kind == "actmul"
+    assert n.n_in == 32 and n.n_out == 64 and n.h_in == 64
+    # in_words covers both activation operands
+    assert n.in_words == 32 * 64 + 32 * 64
+    assert n.weight_words == 0
+
+
+def test_actmul_with_raw_input_operand_counts_ext_words():
+    """actmul of a projected query against the raw input: the input-side
+    operand has no producer edge, so its frame is ext_in_words (read from
+    DRAM in every grouping) — previously dropped entirely."""
+
+    def fn(wq, x):
+        q = x @ wq
+        return q @ x.T
+
+    g = F.trace(fn, _sds(32, 32), _sds(64, 32))
+    q_node, am = g.nodes
+    assert am.kind == "actmul" and am.ext_in_words == 64 * 32
+    assert [(e.src, e.dst) for e in g.edges] == [(0, 1)]
+    # fully fused physical truth: wq weights + x read by q + x re-read by
+    # the actmul + the (64, 64) output write
+    fused = M.bandwidth_ref(g, np.zeros(1, bool))
+    assert fused == q_node.weight_words + 64 * 32 + 64 * 32 + 64 * 64
+
+
+def test_join_of_two_raw_inputs_counts_both_frames():
+    """a + b with a, b two graph inputs: the join is a source reading one
+    frame via in_words; the second frame lands in ext_in_words —
+    previously the op folded away and a frame read vanished."""
+
+    def fn(w, ab):
+        a, b = ab
+        return jax.lax.conv_general_dilated(
+            a + b, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+    frame = 8 * 8 * 8
+    g = F.trace(fn, _sds(3, 3, 8, 8), (_sds(1, 8, 8, 8), _sds(1, 8, 8, 8)))
+    join, conv = g.nodes
+    assert join.kind == "elementwise" and join.ext_in_words == frame
+    assert g.source_mask[0]  # the join is the graph's source
+    w_words = conv.weight_words
+    # fused: both input frames in, one output frame out
+    assert M.bandwidth_ref(g, np.zeros(1, bool)) == w_words + 3 * frame
+    # cut: + join's frame write and the conv's read-back
+    assert M.bandwidth_ref(g, np.ones(1, bool)) == w_words + 5 * frame
+
+
+def test_rectangular_spatial_reduce_raises():
+    """A reduction the IR cannot represent must raise, not silently fold
+    (folding would emit producer frames that disagree with edge words)."""
+
+    def fn(w, x):
+        h = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.mean(h, axis=(1, 2))
+
+    with pytest.raises(ValueError, match="not representable"):
+        F.trace(fn, _sds(3, 3, 8, 8), _sds(1, 8, 4, 8))
+
+
+def test_square_global_mean_maps_to_pool():
+    def fn(w, x):
+        h = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.mean(h, axis=(1, 2))
+
+    g = F.trace(fn, _sds(3, 3, 8, 8), _sds(1, 8, 8, 8))
+    assert [n.kind for n in g.nodes] == ["conv", "pool"]
+    pool = g.nodes[1]
+    assert (pool.kh, pool.kw, pool.stride) == (8, 8, 8)
+    assert pool.out_words == 8  # (1, 1, C)
+
+
+def test_conv_with_activation_kernel_raises():
+    """conv(weights, activation-as-kernel) must raise, not silently drop
+    the layer (activation products belong to dot_general/actmul)."""
+
+    def fn(w, x):
+        return jax.lax.conv_general_dilated(
+            w, x, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+
+    with pytest.raises(ValueError, match="activation kernel"):
+        F.trace(fn, _sds(1, 8, 8, 4), _sds(3, 3, 4, 4))
+
+
+def test_traced_graph_runs_batched_evaluator():
+    """End-to-end: trace -> enumerate -> batched evaluator == oracle."""
+
+    def fn(params, x):
+        h = jax.lax.conv_general_dilated(
+            x, params["wd"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=8,
+        )
+        h = jax.nn.relu(h + params["bd"])
+        y = jax.lax.conv_general_dilated(
+            h, params["wp"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return x + y  # residual join
+
+    params = {"wd": _sds(3, 3, 1, 8), "bd": _sds(8), "wp": _sds(1, 1, 8, 8)}
+    g = F.trace(fn, params, _sds(1, 8, 8, 8))
+    assert [n.kind for n in g.nodes] == ["conv", "conv", "elementwise"]
+    assert g.nodes[0].groups == 8
+    # the join re-reads the raw input x in every grouping (no producer edge)
+    frame = 8 * 8 * 8
+    assert g.nodes[2].ext_in_words == frame
+    cuts = fusion.enumerate_valid_edge_cuts(g)
+    bw = M.bandwidth_batch_graph(g, cuts)
+    for i in range(cuts.shape[0]):
+        assert bw[i] == M.bandwidth_ref(g, cuts[i])
+    # physical truth, layer-by-layer: dw reads x + writes h; pw reads h
+    # (cut edge) + writes y; join reads y (cut edge) + re-reads x + writes
+    weights = g.nodes[0].weight_words + g.nodes[1].weight_words
+    lbl = M.bandwidth_ref(g, fusion.layer_by_layer_cuts(g))
+    assert lbl == weights + 7 * frame
+    # fully fused: x read once by dw, re-read by the join, one output write
+    assert M.bandwidth_ref(g, np.zeros(g.n_edges, bool)) == weights + 3 * frame
