@@ -9,20 +9,46 @@ realisation of the paper's exhaustive sweep — the benchmark reports
 candidates/second.  Groupings are boolean cut vectors over the graph's
 edges; chains (``NetworkIR``) are embedded losslessly via
 :func:`repro.core.ir.as_graph`.
+
+Two serving-system moves keep the cold path cheap (``benchmarks/
+bench_fleet.py``): argument shapes are rounded up to power-of-two *shape
+buckets* and evaluated through masked kernels (padded rows exactly inert),
+so distinct graphs share one compiled executable instead of each paying
+XLA compilation per exact ``(L, E, C)`` signature; and :func:`run_fleet`
+stacks many padded graphs along a leading axis to evaluate the whole
+``(G, H, C)`` cross-product — the entire model fleet — in one program.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Sequence
 
-import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from . import fusion
 from . import metrics as M
 from .arch import Constraints, DLAConfig, default_config_space
-from .ir import GraphIR, NetworkIR, as_graph
+from .ir import (
+    GraphIR,
+    NetworkIR,
+    as_graph,
+    bucket_size,
+    pad_cuts_batch,
+    pad_graph,
+)
+
+# Shape-bucket floors: (L, E, C) are rounded up to the next power of two, but
+# never below these, so every in-repo workload (VGG-16 18/17, ResNet-18
+# 31/38, MobileNet 17/18, MLP block 4/3, encoder-decoder 19/21, residual
+# block 4/4) lands in the SAME (32, 64) bucket and one cached executable
+# serves the whole model fleet.  The padded rows are exactly inert (masked
+# kernels), so bucketing never changes a metric — it only kills recompiles.
+NODE_BUCKET_FLOOR = 32
+EDGE_BUCKET_FLOOR = 64
+CUT_BUCKET_FLOOR = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,26 +78,78 @@ class FlowResult:
         )
 
 
-# AOT-compiled evaluator executables keyed by argument shapes, so a
-# run_flow call executes the sweep exactly once: the first call with a new
-# shape signature pays (and reports) the XLA compile, repeats reuse the
-# executable and report compile_seconds == 0.
-_COMPILED_SWEEPS: dict[tuple, object] = {}
+# AOT-compiled evaluator executables keyed by (kernel, argument shapes), so
+# a run_flow/run_fleet call executes the sweep exactly once: the first call
+# with a new shape signature pays (and reports) the XLA compile, repeats
+# reuse the executable and report compile_seconds == 0.  The cache is a
+# bounded LRU: a hit refreshes the entry, and at capacity only the
+# least-recently-used executable is evicted (never a wholesale clear, which
+# would drop every hot executable at once).
+_COMPILED_SWEEPS: "collections.OrderedDict[tuple, object]" = (
+    collections.OrderedDict()
+)
+SWEEP_CACHE_CAPACITY = 64
+_SWEEP_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
-def _compiled_sweep(args) -> tuple[object, float]:
-    """(executable, compile_seconds_this_call) for evaluate_batch_graph."""
-    key = tuple((a.shape, str(a.dtype)) for a in args)
+def _sweep_cache_get(key: tuple):
+    """LRU lookup: a hit moves the entry to the most-recently-used end."""
     exe = _COMPILED_SWEEPS.get(key)
+    if exe is not None:
+        _COMPILED_SWEEPS.move_to_end(key)
+        _SWEEP_CACHE_STATS["hits"] += 1
+    return exe
+
+
+def _sweep_cache_put(key: tuple, exe) -> None:
+    """LRU insert: evicts oldest entries only, one at a time, at capacity."""
+    _SWEEP_CACHE_STATS["misses"] += 1
+    while len(_COMPILED_SWEEPS) >= SWEEP_CACHE_CAPACITY:
+        _COMPILED_SWEEPS.popitem(last=False)
+        _SWEEP_CACHE_STATS["evictions"] += 1
+    _COMPILED_SWEEPS[key] = exe
+
+
+def sweep_cache_stats() -> dict:
+    """Executable-cache accounting: {size, hits, misses, evictions}.
+    ``misses`` counts XLA compilations actually paid — the fleet benchmark
+    asserts a whole multi-model sweep costs exactly one."""
+    return dict(_SWEEP_CACHE_STATS, size=len(_COMPILED_SWEEPS))
+
+
+def clear_sweep_cache() -> None:
+    _COMPILED_SWEEPS.clear()
+    for k in _SWEEP_CACHE_STATS:
+        _SWEEP_CACHE_STATS[k] = 0
+
+
+def _compiled_sweep(fn, args) -> tuple[object, float]:
+    """(executable, compile_seconds_this_call) for a jitted metric kernel.
+
+    Lowered under scoped ``enable_x64`` with float64 numpy arguments, so
+    the sweep is exact (bit-identical to the scalar oracles) without
+    touching the process-global JAX precision config."""
+    key = (getattr(fn, "__name__", str(fn)),) + tuple(
+        (a.shape, str(a.dtype)) for a in args
+    )
+    exe = _sweep_cache_get(key)
     if exe is not None:
         return exe, 0.0
     t0 = time.perf_counter()
-    exe = M.evaluate_batch_graph.lower(*args).compile()
+    with enable_x64():
+        exe = fn.lower(*args).compile()
     dt = time.perf_counter() - t0
-    if len(_COMPILED_SWEEPS) >= 64:
-        _COMPILED_SWEEPS.clear()
-    _COMPILED_SWEEPS[key] = exe
+    _sweep_cache_put(key, exe)
     return exe, dt
+
+
+def _run_sweep(exe, args) -> tuple[np.ndarray, float]:
+    """(result, sweep_seconds): one timed execution of an AOT executable
+    (inside ``enable_x64`` — the executable's avals are float64)."""
+    t1 = time.perf_counter()
+    with enable_x64():
+        out = np.asarray(exe(*args))
+    return out, time.perf_counter() - t1
 
 
 def _metrics_from_row(row: np.ndarray) -> M.Metrics:
@@ -80,6 +158,45 @@ def _metrics_from_row(row: np.ndarray) -> M.Metrics:
         latency_cycles=float(row[1]),
         energy_nj=float(row[2]),
         area_um2=float(row[3]),
+    )
+
+
+def _best_flow_result(
+    out: np.ndarray,  # (H, C, 4) — real candidate rows only, padding sliced
+    cuts_batch: np.ndarray,  # (C, E) — real cut rows, real edge columns
+    g: GraphIR,
+    config_space: Sequence[DLAConfig],
+    constraints: Constraints,
+    *,
+    n_pruned: int,
+    compile_seconds: float,
+    sweep_seconds: float,
+    candidates_per_second: float,
+    err_prefix: str = "",
+) -> FlowResult:
+    """Constraint filter + min-energy argmin over one graph's sweep output —
+    the single best-point selection shared by run_flow and run_fleet (so
+    feasibility/tie-break semantics can never drift between them)."""
+    limits = constraints.as_row()  # (4,)
+    feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
+    n_feas = int(feasible.sum())
+    if n_feas == 0:
+        raise ValueError(f"{err_prefix}no candidate meets the constraints")
+    energy = np.where(feasible, out[:, :, 2], np.inf)
+    h, c = np.unravel_index(np.argmin(energy), energy.shape)
+    labels = fusion.cut_group_labels(g, cuts_batch[c])
+    sizes = tuple(len(grp) for grp in fusion.groups_from_labels(labels))
+    return FlowResult(
+        best_hw=config_space[h],
+        best_cuts=cuts_batch[c],
+        best_metrics=_metrics_from_row(out[h, c]),
+        group_sizes=sizes,
+        n_candidates=out.shape[0] * out.shape[1],
+        n_feasible=n_feas,
+        n_pruned=n_pruned,
+        compile_seconds=compile_seconds,
+        sweep_seconds=sweep_seconds,
+        candidates_per_second=candidates_per_second,
     )
 
 
@@ -110,7 +227,13 @@ def groupings_batch(
                 f"{g.name}: {e}; pass groupings='search' for large graphs"
             ) from None
     if groupings == "pool":
-        return np.stack([g.pool_boundary_cuts(), fusion.layer_by_layer_cuts(g)])
+        # np.unique-dedupe like the "search" path: on graphs where the pool
+        # policy degenerates to layer-by-layer (e.g. every producer ends a
+        # pooling stage) the duplicate row must not be scored twice.
+        return np.unique(
+            np.stack([g.pool_boundary_cuts(), fusion.layer_by_layer_cuts(g)]),
+            axis=0,
+        )
     if groupings in ("dp", "search"):
         rows = [
             fusion.optimal_cuts(g, sram_budget_words=sram_budget_words).cuts,
@@ -128,6 +251,7 @@ def run_flow(
     constraints: Constraints = Constraints(),
     groupings: str | np.ndarray = "exhaustive",
     sram_budget_words: float = float("inf"),
+    bucket: bool = True,
 ) -> FlowResult:
     """Sweep (hw x grouping), filter by constraints, return min-energy point.
 
@@ -136,6 +260,19 @@ def run_flow(
     sweep via the batched prefilter
     (:func:`repro.core.fusion.graph_feasible_mask_batch`), so the XLA
     program never evaluates candidates the budget would reject anyway.
+
+    With ``bucket=True`` (the default) the ``(L, E, C)`` signature is
+    rounded up to power-of-two shape buckets (floors ``NODE_BUCKET_FLOOR``
+    etc.) and evaluated through the masked kernels — bit-identical metrics
+    (padded rows are exactly inert), but graphs sharing a bucket share one
+    compiled executable instead of each paying the XLA compile.  Bucketing
+    the candidate axis re-pads the prefiltered batch with up to ~2x inert
+    dummy rows (sliced off before the argmin) — microseconds of sweep work
+    traded for skipping whole-seconds recompiles on every distinct
+    surviving-candidate count.  ``bucket=False`` keeps the exact-shape,
+    no-dummy signature (one compile per distinct graph — the benchmark
+    baseline).
+
     The evaluator is AOT-compiled once per argument-shape signature;
     ``compile_seconds`` reports the XLA compilation paid by *this* call
     (0 on an executable-cache hit) and ``sweep_seconds`` /
@@ -144,8 +281,6 @@ def run_flow(
     if config_space is None:
         config_space = default_config_space()
     g = as_graph(ir)
-    feat = g.node_features()
-    esrc, edst, ewords = g.edge_arrays()
     cuts_batch = groupings_batch(
         g, groupings, sram_budget_words=sram_budget_words
     )
@@ -157,47 +292,190 @@ def run_flow(
         if not keep.any():
             raise ValueError("no grouping fits the SRAM budget")
         cuts_batch = cuts_batch[keep]
+    C = cuts_batch.shape[0]
 
     hw_rows = np.stack([c.as_row() for c in config_space])
     area_consts = M.area_consts_of(config_space[0])
 
-    args = (
-        jnp.asarray(feat),
-        jnp.asarray(esrc),
-        jnp.asarray(edst),
-        jnp.asarray(ewords),
-        jnp.asarray(g.source_mask),
-        jnp.asarray(g.sink_mask),
-        jnp.asarray(cuts_batch),
-        jnp.asarray(hw_rows),
-        jnp.asarray(area_consts),
-    )
-    exe, compile_seconds = _compiled_sweep(args)
-    t1 = time.perf_counter()
-    out = np.asarray(exe(*args))  # (H, C, 4)
-    sweep_seconds = time.perf_counter() - t1
-
-    limits = constraints.as_row()  # (4,)
-    feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
-    n_cand = out.shape[0] * out.shape[1]
-    n_feas = int(feasible.sum())
-    if n_feas == 0:
-        raise ValueError("no candidate meets the constraints")
-    energy = np.where(feasible, out[:, :, 2], np.inf)
-    h, c = np.unravel_index(np.argmin(energy), energy.shape)
-    labels = fusion.cut_group_labels(g, cuts_batch[c])
-    sizes = tuple(len(grp) for grp in fusion.groups_from_labels(labels))
-    return FlowResult(
-        best_hw=config_space[h],
-        best_cuts=cuts_batch[c],
-        best_metrics=_metrics_from_row(out[h, c]),
-        group_sizes=sizes,
-        n_candidates=n_cand,
-        n_feasible=n_feas,
+    if bucket:
+        pg = pad_graph(
+            g,
+            n_nodes=bucket_size(g.n_nodes, NODE_BUCKET_FLOOR),
+            n_edges=bucket_size(g.n_edges, EDGE_BUCKET_FLOOR),
+        )
+        args = (
+            pg.feat,
+            pg.esrc,
+            pg.edst,
+            pg.ewords,
+            pg.src_mask,
+            pg.sink_mask,
+            pad_cuts_batch(
+                cuts_batch, pg.n_edges_padded, bucket_size(C, CUT_BUCKET_FLOOR)
+            ),
+            hw_rows,
+            area_consts,
+            pg.node_mask,
+            pg.edge_mask,
+        )
+    else:
+        feat = g.node_features()
+        esrc, edst, ewords = g.edge_arrays()
+        args = (
+            feat,
+            esrc,
+            edst,
+            ewords,
+            g.source_mask,
+            g.sink_mask,
+            cuts_batch,
+            hw_rows,
+            area_consts,
+        )
+    exe, compile_seconds = _compiled_sweep(M._jit_batch_graph, args)
+    # raw (H, C_b, 5) rows -> (H, C, 4) metrics, padded candidate rows
+    # sliced off before feasibility/argmin
+    raw, sweep_seconds = _run_sweep(exe, args)
+    out = M.compose_metrics(raw, hw_rows)[:, :C]
+    n_cand = out.shape[0] * C
+    return _best_flow_result(
+        out, cuts_batch, g, config_space, constraints,
         n_pruned=n_pruned,
         compile_seconds=compile_seconds,
         sweep_seconds=sweep_seconds,
         candidates_per_second=n_cand / max(sweep_seconds, 1e-9),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetResult:
+    """One multi-graph sweep: per-graph best points + shared-compile split."""
+
+    results: tuple[FlowResult, ...]  # one FlowResult per input graph
+    n_graphs: int
+    n_candidates: int  # real (graph, hw, cut) triples across the fleet
+    compile_seconds: float  # ONE compile amortised across the whole fleet
+    sweep_seconds: float  # the single timed (G, H, C) execution
+    candidates_per_second: float
+
+    def describe(self) -> str:
+        lines = [
+            f"fleet of {self.n_graphs}: {self.n_candidates} candidates in "
+            f"{self.sweep_seconds*1e3:.2f} ms "
+            f"({self.candidates_per_second:,.0f} cand/s, one compile "
+            f"{self.compile_seconds*1e3:.0f} ms)"
+        ]
+        lines += [f"  {r.describe()}" for r in self.results]
+        return "\n".join(lines)
+
+
+def run_fleet(
+    irs: Sequence[NetworkIR | GraphIR],
+    *,
+    config_space: Sequence[DLAConfig] | None = None,
+    constraints: Constraints = Constraints(),
+    groupings: str | np.ndarray = "search",
+    sram_budget_words: float = float("inf"),
+) -> FleetResult:
+    """Sweep many graphs' (hw x grouping) cross-products in ONE XLA program.
+
+    Every graph is zero-padded to the fleet-wide ``(L, E, C)`` bucket
+    (power-of-two, same floors as :func:`run_flow`), stacked along a new
+    leading axis, and evaluated by a single vmapped executable
+    (:func:`repro.core.metrics.evaluate_fleet_graph`) — the whole fleet
+    pays at most one XLA compile (0 on a bucket-cache hit), which is the
+    serving-system move the per-model cold path cannot make.  Per-graph
+    metrics are bit-identical to :func:`run_flow` (padded rows are exactly
+    inert and sliced off before feasibility/argmin; asserted in tests).
+
+    ``groupings`` / ``sram_budget_words`` / ``constraints`` apply to every
+    graph; the SRAM prefilter runs per graph on the padded cut rows
+    (:func:`repro.core.fusion.padded_feasible_mask_batch`).  Returns a
+    :class:`FleetResult` whose ``results[i]`` is graph ``i``'s
+    :class:`FlowResult`; the shared compile is reported fleet-level, so
+    per-graph ``compile_seconds`` is 0, and per-graph ``sweep_seconds`` /
+    ``candidates_per_second`` describe the one shared execution (every
+    member reports the fleet-wide throughput, not its own slice of it).
+    """
+    if not irs:
+        raise ValueError("empty fleet")
+    if config_space is None:
+        config_space = default_config_space()
+    graphs = [as_graph(ir) for ir in irs]
+
+    # Per-graph grouping resolution + SRAM prefilter (padded-E cut rows).
+    edge_bucket = bucket_size(
+        max(g.n_edges for g in graphs), EDGE_BUCKET_FLOOR
+    )
+    node_bucket = bucket_size(
+        max(g.n_nodes for g in graphs), NODE_BUCKET_FLOOR
+    )
+    padded = [pad_graph(g, n_nodes=node_bucket, n_edges=edge_bucket)
+              for g in graphs]
+    cuts: list[np.ndarray] = []
+    pruned: list[int] = []
+    for g, pg in zip(graphs, padded):
+        cb = pad_cuts_batch(
+            groupings_batch(g, groupings, sram_budget_words=sram_budget_words),
+            edge_bucket,
+        )
+        n_pruned = 0
+        if np.isfinite(sram_budget_words):
+            keep = fusion.padded_feasible_mask_batch(pg, cb, sram_budget_words)
+            n_pruned = int(cb.shape[0] - keep.sum())
+            if not keep.any():
+                raise ValueError(f"{g.name}: no grouping fits the SRAM budget")
+            cb = cb[keep]
+        cuts.append(cb)
+        pruned.append(n_pruned)
+    counts = [cb.shape[0] for cb in cuts]
+    cut_bucket = bucket_size(max(counts), CUT_BUCKET_FLOOR)
+    cuts = [pad_cuts_batch(cb, edge_bucket, cut_bucket) for cb in cuts]
+
+    hw_rows = np.stack([c.as_row() for c in config_space])
+    area_consts = M.area_consts_of(config_space[0])
+    args = (
+        np.stack([pg.feat for pg in padded]),
+        np.stack([pg.esrc for pg in padded]),
+        np.stack([pg.edst for pg in padded]),
+        np.stack([pg.ewords for pg in padded]),
+        np.stack([pg.src_mask for pg in padded]),
+        np.stack([pg.sink_mask for pg in padded]),
+        np.stack(cuts),
+        hw_rows,
+        area_consts,
+        np.stack([pg.node_mask for pg in padded]),
+        np.stack([pg.edge_mask for pg in padded]),
+    )
+    exe, compile_seconds = _compiled_sweep(M._jit_fleet_graph, args)
+    raw, sweep_seconds = _run_sweep(exe, args)
+    out = M.compose_metrics(raw, hw_rows)  # (G, H, C_b, 4)
+
+    H = hw_rows.shape[0]
+    n_cand = H * sum(counts)
+    fleet_cps = n_cand / max(sweep_seconds, 1e-9)
+    results = []
+    for gi, g in enumerate(graphs):
+        C = counts[gi]
+        results.append(
+            _best_flow_result(
+                out[gi, :, :C],  # padded candidate rows sliced off
+                cuts[gi][:C, : g.n_edges],
+                g, config_space, constraints,
+                n_pruned=pruned[gi],
+                compile_seconds=0.0,  # the one fleet compile, see FleetResult
+                sweep_seconds=sweep_seconds,
+                candidates_per_second=fleet_cps,  # the shared execution rate
+                err_prefix=f"{g.name}: ",
+            )
+        )
+    return FleetResult(
+        results=tuple(results),
+        n_graphs=len(graphs),
+        n_candidates=n_cand,
+        compile_seconds=compile_seconds,
+        sweep_seconds=sweep_seconds,
+        candidates_per_second=fleet_cps,
     )
 
 

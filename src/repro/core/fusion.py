@@ -317,6 +317,35 @@ def graph_feasible_mask_batch(
     return graph_max_intermediate_batch(g, cuts_batch) <= sram_budget_words
 
 
+def padded_max_intermediate_batch(pg, cuts_batch: np.ndarray) -> np.ndarray:
+    """(C,) masked :func:`graph_max_intermediate_batch` over a
+    :class:`repro.core.ir.PaddedGraph` — padded edges are neither internal
+    nor cut, so the result is bit-identical to the unpadded kernel on the
+    real rows (locked in tests).  The fleet prefilter scores cut batches
+    already padded to the fleet's edge bucket without unpadding them."""
+    cuts = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    E_b, L_b = pg.esrc.shape[0], pg.feat.shape[0]
+    unc = ((~cuts) & pg.edge_mask[None, :]).astype(np.float64)
+    inc_src = np.zeros((E_b, L_b))
+    inc_src[np.arange(E_b)[pg.edge_mask], pg.esrc[pg.edge_mask]] = 1.0
+    win_dst = np.zeros((E_b, L_b))
+    win_dst[np.arange(E_b), pg.edst] = pg.ewords  # padded rows: 0 words at 0
+    internal_in = unc @ win_dst  # (C, L_b) summed internal incoming words
+    has_internal_out = (unc @ inc_src) > 0.0
+    need = np.where(has_internal_out, pg.feat[None, :, M.F_OUT_PRE], 0.0)
+    return np.maximum(
+        need.max(axis=1, initial=0.0), internal_in.max(axis=1, initial=0.0)
+    )
+
+
+def padded_feasible_mask_batch(
+    pg, cuts_batch: np.ndarray, sram_budget_words: float
+) -> np.ndarray:
+    """(C,) bool — padded-graph analog of :func:`graph_feasible_mask_batch`,
+    the SRAM prefilter of :func:`repro.core.flow.run_fleet`."""
+    return padded_max_intermediate_batch(pg, cuts_batch) <= sram_budget_words
+
+
 def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float) -> bool:
     return group_max_intermediate(feat, cuts) <= sram_budget_words
 

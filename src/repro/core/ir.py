@@ -527,6 +527,126 @@ class GraphIR:
         return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Shape buckets — zero-padded views for the bucketed evaluator
+# ---------------------------------------------------------------------------
+
+
+def bucket_size(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — the shape-bucket rounding
+    used by :mod:`repro.core.flow` so many graphs share one compiled
+    evaluator executable instead of paying XLA compilation per exact
+    ``(L, E, C)`` signature."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedGraph:
+    """Zero-padded numpy views of a :class:`GraphIR` for bucketed evaluation.
+
+    Padded node rows carry all-zero features with ``node_mask`` False and
+    ``src_mask``/``sink_mask`` False; padded edges point ``0 -> 0`` with
+    ``words == 0`` and ``edge_mask`` False.  The masked metric kernels
+    (:func:`repro.core.metrics.evaluate_batch_graph`) make such rows exactly
+    inert in Eq. (1)-(4): every padded summand is 0.0 and every padded max
+    operand is at or below the unpadded floor, so padded results are
+    bit-identical to the unpadded path (all words are integer-valued
+    float64, hence exact under any summation order).
+    """
+
+    feat: np.ndarray  # (L_b, F) — rows >= n_nodes are all-zero
+    esrc: np.ndarray  # (E_b,) int64 — entries >= n_edges are 0
+    edst: np.ndarray  # (E_b,) int64 — entries >= n_edges are 0
+    ewords: np.ndarray  # (E_b,) float64 — entries >= n_edges are 0.0
+    src_mask: np.ndarray  # (L_b,) bool — False on padded rows
+    sink_mask: np.ndarray  # (L_b,) bool — False on padded rows
+    node_mask: np.ndarray  # (L_b,) bool — True exactly on real nodes
+    edge_mask: np.ndarray  # (E_b,) bool — True exactly on real edges
+    n_nodes: int  # real node count (L)
+    n_edges: int  # real edge count (E)
+
+    @property
+    def n_nodes_padded(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def n_edges_padded(self) -> int:
+        return self.esrc.shape[0]
+
+
+def pad_graph(
+    g: GraphIR, *, n_nodes: int | None = None, n_edges: int | None = None
+) -> PaddedGraph:
+    """Zero-pad ``g``'s evaluator arrays to bucket sizes.
+
+    ``n_nodes``/``n_edges`` are the target (padded) sizes and must be >= the
+    real counts; they default to the next power of two
+    (:func:`bucket_size`).
+    """
+    L, E = g.n_nodes, g.n_edges
+    L_b = bucket_size(L) if n_nodes is None else int(n_nodes)
+    E_b = bucket_size(E) if n_edges is None else int(n_edges)
+    if L_b < L or E_b < E:
+        raise ValueError(
+            f"bucket ({L_b}, {E_b}) smaller than graph ({L}, {E})"
+        )
+    feat = g.node_features()
+    esrc, edst, ewords = g.edge_arrays()
+    feat_p = np.zeros((L_b, feat.shape[1]), dtype=feat.dtype)
+    feat_p[:L] = feat
+    esrc_p = np.zeros(E_b, dtype=np.int64)
+    esrc_p[:E] = esrc
+    edst_p = np.zeros(E_b, dtype=np.int64)
+    edst_p[:E] = edst
+    ewords_p = np.zeros(E_b, dtype=np.float64)
+    ewords_p[:E] = ewords
+
+    def _pad_mask(m: np.ndarray, n: int) -> np.ndarray:
+        out = np.zeros(n, dtype=bool)
+        out[: m.shape[0]] = m
+        return out
+
+    node_mask = np.zeros(L_b, dtype=bool)
+    node_mask[:L] = True
+    edge_mask = np.zeros(E_b, dtype=bool)
+    edge_mask[:E] = True
+    return PaddedGraph(
+        feat=feat_p,
+        esrc=esrc_p,
+        edst=edst_p,
+        ewords=ewords_p,
+        src_mask=_pad_mask(g.source_mask, L_b),
+        sink_mask=_pad_mask(g.sink_mask, L_b),
+        node_mask=node_mask,
+        edge_mask=edge_mask,
+        n_nodes=L,
+        n_edges=E,
+    )
+
+
+def pad_cuts_batch(
+    cuts_batch: np.ndarray, n_edges: int, n_rows: int | None = None
+) -> np.ndarray:
+    """Pad a (C, E) cut batch to ``(n_rows, n_edges)`` with False.
+
+    Padded edge columns are ignored by the masked kernels (``edge_mask``);
+    padded candidate rows evaluate to well-defined but meaningless metrics
+    and must be sliced off by the caller (``out[:, :C]``) before any
+    feasibility test or argmin.
+    """
+    cuts = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    C, E = cuts.shape
+    C_b = C if n_rows is None else int(n_rows)
+    if n_edges < E or C_b < C:
+        raise ValueError(
+            f"pad target ({C_b}, {n_edges}) smaller than batch ({C}, {E})"
+        )
+    out = np.zeros((C_b, n_edges), dtype=bool)
+    out[:C, :E] = cuts
+    return out
+
+
 def uncut_component_labels(
     n_nodes: int, edges: tuple[EdgeSpec, ...], cuts: np.ndarray
 ) -> np.ndarray:

@@ -9,7 +9,11 @@ Two implementations, kept deliberately in lock-step (tests assert equality):
 * ``evaluate_batch_graph`` — a vectorised jnp version broadcast over a batch
   of hardware configurations (H) x a batch of fusion groupings (C), so the
   paper's exhaustive optimisation flow (Sec. II-C) runs as ONE jitted XLA
-  program instead of a Python loop over ~5 M candidates.
+  program instead of a Python loop over ~5 M candidates.  Optional
+  ``node_mask``/``edge_mask`` arguments admit zero-padded inputs (shape
+  buckets, :func:`repro.core.ir.pad_graph`) with padded rows exactly inert;
+  ``evaluate_fleet_graph`` adds a leading graph axis so a whole fleet of
+  padded graphs evaluates as a single program (:mod:`repro.core.flow`).
   ``evaluate_batch`` is the chain-shaped wrapper kept for the original
   (L, F) x (C, L-1) call signature.
 
@@ -39,6 +43,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from .arch import DLAConfig
 from .ir import GraphIR, NetworkIR, as_graph
@@ -371,10 +376,34 @@ def _evaluate_one_graph(
     cuts: jnp.ndarray,  # (E,) bool
     hw: jnp.ndarray,
     area_consts: jnp.ndarray,
+    node_mask: jnp.ndarray,  # (L,) bool — False on padded node rows
+    edge_mask: jnp.ndarray,  # (E,) bool — False on padded edge slots
 ) -> jnp.ndarray:
-    """Metrics for one (grouping, hw) pair -> (4,) [bw, lat, energy, area]."""
+    """Raw row for one (grouping, hw) pair -> (5,) [bw, lat, c_sram, c_pb,
+    area]; :func:`compose_metrics` turns it into [bw, lat, energy, area].
+
+    Energy is deliberately NOT composed here: every quantity this kernel
+    emits is exact in float64 (integer-valued sums; latency divides only by
+    the power-of-two bus width; all area constants are dyadic), so results
+    are bit-identical across program shapes — but ``e_sram``/``e_pb`` are
+    non-dyadic, and XLA's freedom to FMA-fuse ``mul+add`` differently in
+    the batch vs the vmapped fleet program would make an in-kernel energy
+    differ between the two by an ulp.  Composing outside XLA (numpy) keeps
+    every compiled variant bit-identical to the scalar oracles.
+
+    ``node_mask``/``edge_mask`` admit zero-padded inputs (shape buckets, see
+    :func:`repro.core.ir.pad_graph`): a padded edge is neither cut nor
+    internal regardless of its ``cuts`` bit, and a padded node contributes
+    no pipeline latency.  Padded feature rows are all-zero, so with the
+    masks every padded term is exactly 0.0 (or the STAGING_WORDS floor in
+    the Eq. (4) maxes) and padded evaluation is bit-identical to unpadded
+    (integer-valued float64 words sum exactly in any order).
+    """
     L = feat.shape[0]
-    cutf = cuts.astype(feat.dtype)
+    # A padded edge is inert on both sides of the cut/internal split.
+    cut_real = cuts & edge_mask
+    internal_real = (~cuts) & edge_mask
+    cutf = cut_real.astype(feat.dtype)
 
     # Node write mask: sink, or >= 1 cut outgoing edge (scatter-max over src).
     any_out_cut = jnp.zeros(L, feat.dtype).at[esrc].max(cutf) > 0.5
@@ -384,37 +413,42 @@ def _evaluate_one_graph(
     read_src = jnp.sum(jnp.where(src_mask, feat[:, F_IN], 0.0)) + jnp.sum(
         feat[:, F_EXT]
     )
-    read_edges = jnp.sum(jnp.where(cuts, ewords, 0.0))
+    read_edges = jnp.sum(jnp.where(cut_real, ewords, 0.0))
     write_out = jnp.sum(jnp.where(writes, feat[:, F_OUT], 0.0))
     bw = jnp.sum(feat[:, F_W]) + read_src + read_edges + write_out
 
-    # Eq. (2)
+    # Eq. (2) — pipeline latency counts real nodes, not the padded shape
     t_pb = _pe_busy_cycles_vec(feat, hw)
+    n_real = jnp.sum(node_mask.astype(feat.dtype))
     lat = (
         jnp.sum(feat[:, F_W]) / hw[H_DWPC]
         + jnp.sum(t_pb)
-        + L * hw[H_TPL]
+        + n_real * hw[H_TPL]
         + (read_src + read_edges) / hw[H_DWPC]
         + write_out / hw[H_DWPC]
     )
 
     # Eq. (3) — per-node input SRAM traffic is max(in_words, incoming edges)
     # so multi-input nodes count every operand (see sram_accesses_ref).
-    in_edge = jnp.zeros(L, feat.dtype).at[edst].add(ewords)
+    in_edge = jnp.zeros(L, feat.dtype).at[edst].add(
+        jnp.where(edge_mask, ewords, 0.0)
+    )
     c_sram = jnp.sum(
         feat[:, F_W]
         + jnp.maximum(feat[:, F_IN], in_edge + feat[:, F_EXT])
         + feat[:, F_OUT]
     )
     c_pb = jnp.sum(t_pb) * hw[H_PEU]
-    energy = hw[H_EDRAM] * bw + hw[H_ESRAM] * c_sram + hw[H_EPB] * c_pb
 
     # Eq. (4): internal incoming tensors coexist in IF SRAM; a node with any
     # fused consumer holds its *pre-pool* frame in OF SRAM.
     internal_in = jnp.zeros(L, feat.dtype).at[edst].add(
-        jnp.where(cuts, 0.0, ewords)
+        jnp.where(internal_real, ewords, 0.0)
     )
-    any_out_internal = jnp.zeros(L, feat.dtype).at[esrc].max(1.0 - cutf) > 0.5
+    any_out_internal = (
+        jnp.zeros(L, feat.dtype).at[esrc].max(internal_real.astype(feat.dtype))
+        > 0.5
+    )
     src_need = jnp.where(internal_in > 0, internal_in, STAGING_WORDS)
     dst_need = jnp.where(any_out_internal, feat[:, F_OUT_PRE], STAGING_WORDS)
     if_need = jnp.maximum(jnp.max(src_need), STAGING_WORDS)
@@ -427,11 +461,10 @@ def _evaluate_one_graph(
         + (if_need + w_need + of_need) * a_byte
         + a_ctrl
     )
-    return jnp.stack([bw, lat, energy, area])
+    return jnp.stack([bw, lat, c_sram, c_pb, area])
 
 
-@jax.jit
-def evaluate_batch_graph(
+def _evaluate_batch_graph(
     feat: jnp.ndarray,  # (L, F) float
     esrc: jnp.ndarray,  # (E,) int
     edst: jnp.ndarray,  # (E,) int
@@ -441,19 +474,142 @@ def evaluate_batch_graph(
     cuts_batch: jnp.ndarray,  # (C, E) bool
     hw_rows: jnp.ndarray,  # (H, 11) float
     area_consts: jnp.ndarray,  # (4,) float
+    node_mask: jnp.ndarray | None = None,  # (L,) bool; None = no padding
+    edge_mask: jnp.ndarray | None = None,  # (E,) bool; None = no padding
 ) -> jnp.ndarray:
-    """All metrics for every (hw, grouping) pair -> (H, C, 4)."""
+    """Unjitted kernel body -> RAW (H, C, 5) rows (eager path for tests);
+    :func:`compose_metrics` folds them to (H, C, 4) metrics."""
+    if node_mask is None:
+        node_mask = jnp.ones(feat.shape[0], dtype=bool)
+    if edge_mask is None:
+        edge_mask = jnp.ones(esrc.shape[0], dtype=bool)
     per_cut = jax.vmap(
         _evaluate_one_graph,
-        in_axes=(None, None, None, None, None, None, 0, None, None),
+        in_axes=(None, None, None, None, None, None, 0, None, None, None, None),
     )
     per_hw = jax.vmap(
-        per_cut, in_axes=(None, None, None, None, None, None, None, 0, None)
+        per_cut,
+        in_axes=(None, None, None, None, None, None, None, 0, None, None, None),
     )
     return per_hw(
         feat, esrc, edst, ewords, src_mask, sink_mask, cuts_batch, hw_rows,
-        area_consts,
+        area_consts, node_mask, edge_mask,
     )
+
+
+# Jitted kernels (used AOT by repro.core.flow, always under enable_x64).
+# They return RAW (…, 5) rows; compose_metrics folds them to (…, 4).
+_jit_batch_graph = jax.jit(_evaluate_batch_graph)
+
+
+def compose_metrics(raw, hw_rows) -> np.ndarray:
+    """(…, H, C, 5) raw kernel rows -> (…, H, C, 4) [bw, lat, energy, area].
+
+    Eq. (3) is composed here, outside XLA, in numpy: separate multiply and
+    add passes cannot be FMA-fused, so every compiled kernel variant
+    (exact-shape, shape-bucketed, vmapped fleet) yields bit-identical
+    energy — and the term order matches :func:`energy_ref` exactly.
+    """
+    raw = np.asarray(raw)
+    hw = np.asarray(hw_rows)
+    bw, lat, c_sram, c_pb, area = np.moveaxis(raw, -1, 0)
+    # (H, 1) factors broadcast against (…, H, C) metric planes.
+    e_dram = hw[:, H_EDRAM, None]
+    e_sram = hw[:, H_ESRAM, None]
+    e_pb = hw[:, H_EPB, None]
+    energy = e_dram * bw + e_sram * c_sram + e_pb * c_pb
+    return np.stack([bw, lat, energy, area], axis=-1)
+
+
+def evaluate_batch_graph(
+    feat,
+    esrc,
+    edst,
+    ewords,
+    src_mask,
+    sink_mask,
+    cuts_batch,
+    hw_rows,
+    area_consts,
+    node_mask=None,
+    edge_mask=None,
+) -> np.ndarray:
+    """All metrics for every (hw, grouping) pair -> (H, C, 4).
+
+    The optional node/edge masks admit zero-padded (shape-bucketed) inputs;
+    with masks of all-True (or None) this is exactly the unpadded evaluator.
+
+    Evaluation runs under a *scoped* ``enable_x64`` (the global JAX config
+    is untouched), so the dtype follows the inputs: float64 numpy arrays —
+    the flow's path — evaluate in float64 and are **bit-identical** to the
+    scalar ``*_ref`` oracles (all words are integer-valued, every division
+    is by the power-of-two DRAM bus width, energy is composed outside XLA
+    by :func:`compose_metrics`, and multiplication order matches the
+    oracles term for term); pre-converted float32 ``jnp`` arrays keep
+    float32 semantics.
+    """
+    with enable_x64():
+        raw = _jit_batch_graph(
+            feat, esrc, edst, ewords, src_mask, sink_mask, cuts_batch,
+            hw_rows, area_consts, node_mask, edge_mask,
+        )
+    return compose_metrics(raw, hw_rows)
+
+
+def _evaluate_fleet_graph(
+    feat: jnp.ndarray,  # (G, L, F) float — padded to one fleet bucket
+    esrc: jnp.ndarray,  # (G, E) int
+    edst: jnp.ndarray,  # (G, E) int
+    ewords: jnp.ndarray,  # (G, E) float
+    src_mask: jnp.ndarray,  # (G, L) bool
+    sink_mask: jnp.ndarray,  # (G, L) bool
+    cuts_batch: jnp.ndarray,  # (G, C, E) bool
+    hw_rows: jnp.ndarray,  # (H, 11) float — shared across the fleet
+    area_consts: jnp.ndarray,  # (4,) float
+    node_mask: jnp.ndarray,  # (G, L) bool
+    edge_mask: jnp.ndarray,  # (G, E) bool
+) -> jnp.ndarray:
+    """Raw rows for every (graph, hw, grouping) triple -> (G, H, C, 5).
+
+    One more vmap level over :func:`evaluate_batch_graph`: a whole fleet of
+    graphs, zero-padded to a common ``(L, E, C)`` bucket
+    (:func:`repro.core.ir.pad_graph`), evaluated by a single XLA program —
+    the multi-graph sweep pays one compile regardless of fleet size.
+    """
+    per_graph = jax.vmap(
+        _evaluate_batch_graph,
+        in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, 0, 0),
+    )
+    return per_graph(
+        feat, esrc, edst, ewords, src_mask, sink_mask, cuts_batch, hw_rows,
+        area_consts, node_mask, edge_mask,
+    )
+
+
+_jit_fleet_graph = jax.jit(_evaluate_fleet_graph)
+
+
+def evaluate_fleet_graph(
+    feat,
+    esrc,
+    edst,
+    ewords,
+    src_mask,
+    sink_mask,
+    cuts_batch,
+    hw_rows,
+    area_consts,
+    node_mask,
+    edge_mask,
+) -> np.ndarray:
+    """(G, H, C, 4) metrics — scoped-x64 wrapper over the jitted fleet
+    kernel (see :func:`evaluate_batch_graph` for the dtype contract)."""
+    with enable_x64():
+        raw = _jit_fleet_graph(
+            feat, esrc, edst, ewords, src_mask, sink_mask, cuts_batch,
+            hw_rows, area_consts, node_mask, edge_mask,
+        )
+    return compose_metrics(raw, hw_rows)
 
 
 def chain_edge_arrays(feat: np.ndarray):
