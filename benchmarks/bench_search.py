@@ -1,14 +1,18 @@
-"""Search-engine benchmark — PR 1 scalar path vs the batched engine.
+"""Search-engine benchmark — scalar path vs batched engine vs frontier DP.
 
-Times enumeration, brute force, and greedy/beam merge search on the three
-DAG builders (residual block, encoder-decoder, ResNet-18) and writes
-``BENCH_search.json`` at the repo root with candidates/s and the speedup
-vs the preserved scalar implementations (``fusion._*_scalar``).  Cases
-where the scalar path is intractable (2^21 patterns through a per-pattern
-Python filter) report batched-only throughput.
+Times enumeration, brute force, greedy/beam merge search, and the exact
+frontier-state DP on the three DAG builders (residual block,
+encoder-decoder, ResNet-18) and writes ``BENCH_search.json`` at the repo
+root with candidates/s and the speedup vs each case's baseline (the
+preserved ``fusion._*_scalar`` implementations, or — for the DP cases —
+the 2^E flat enumeration / beam search it supersedes).  Cases where the
+baseline is intractable (2^21 patterns through a per-pattern Python
+filter) report batched-only throughput.
 
-Whenever both paths run, the benchmark also asserts the cut vectors are
-bit-identical — a free regression check in CI.
+Whenever both paths run, the benchmark also asserts the agreed-on
+invariant — bit-identical cut vectors, bit-identical minimum cost
+(frontier DP vs brute force), or exact-at-most-heuristic (frontier DP vs
+beam) — a free regression check in CI.
 
 Usage: ``python benchmarks/bench_search.py [--smoke]`` (``--smoke`` = one
 measured rep per case, for the CI smoke job).
@@ -32,6 +36,7 @@ OUT = ROOT / "BENCH_search.json"
 def _clear_engine_caches() -> None:
     fusion.enumerate_valid_edge_cuts.cache_clear()
     fusion._exhaustive_tables.cache_clear()
+    fusion._frontier_dp_cached.cache_clear()
 
 
 def _bench(fn, reps: int):
@@ -58,18 +63,33 @@ class Bench:
         batched,
         scalar=None,
         n_candidates: int | None = None,
-        compare_cuts: bool = True,
+        compare: str | None = "cuts",
         scalar_reps: int = 1,
     ) -> None:
+        """``compare``: the invariant asserted between the two paths —
+        "cuts" (bit-identical vectors), "cost" (bit-identical minimum
+        group cost: the frontier-DP-vs-enumeration contract, ties may pick
+        different optimal cuts), "cost_le" (exact at most heuristic), or
+        None."""
         _clear_engine_caches()
         b_res, b_best, b_cold = _bench(batched, max(self.reps, 2))
         s_best = s_res = None
         if scalar is not None:
             s_res, s_best, _ = _bench(scalar, scalar_reps)
-            if compare_cuts:
+            if compare == "cuts":
                 assert np.array_equal(
                     np.asarray(b_res.cuts), np.asarray(s_res.cuts)
                 ), f"{name}: batched cuts differ from scalar"
+            elif compare == "cost":
+                assert b_res.group_cost_words == s_res.group_cost_words, (
+                    f"{name}: {b_res.group_cost_words} != "
+                    f"{s_res.group_cost_words}"
+                )
+            elif compare == "cost_le":
+                assert b_res.group_cost_words <= s_res.group_cost_words, (
+                    f"{name}: exact {b_res.group_cost_words} worse than "
+                    f"heuristic {s_res.group_cost_words}"
+                )
         row = {
             "name": name,
             "n_candidates": n_candidates,
@@ -117,7 +137,7 @@ def main() -> None:
         batched=lambda: fusion.enumerate_valid_edge_cuts(rb),
         scalar=lambda: fusion._enumerate_valid_edge_cuts_scalar(rb),
         n_candidates=2**rb.n_edges,
-        compare_cuts=False,
+        compare=None,
         scalar_reps=reps,
     )
     bench.case(
@@ -179,6 +199,36 @@ def main() -> None:
         scalar=lambda: fusion._beam_merge_cuts_scalar(ed),
     )
 
+    # -- frontier DP (exact beyond the 2^E enumeration wall) --------------
+    # Encoder-decoder: the DP's answer must be bit-identical in cost to the
+    # 2^21 flat enumeration it supersedes (ties may differ in cuts), and the
+    # acceptance bar is beating its cold wall clock outright.
+    bench.case(
+        "frontier_dp.encoder_decoder",
+        batched=lambda: fusion.frontier_dp_min_bw(ed),
+        scalar=lambda: fusion.brute_force_min_bw(ed),
+        n_candidates=2**ed.n_edges,
+        compare="cost",
+    )
+    # ResNet-18 (38 edges, 2^38 patterns): previously heuristic-only; the
+    # exact DP optimum can only match or beat the beam answer.
+    bench.case(
+        "frontier_dp.resnet18",
+        batched=lambda: fusion.frontier_dp_min_bw(rn),
+        scalar=lambda: fusion.beam_merge_cuts(rn),
+        compare="cost_le",
+    )
+    bench.case(
+        "frontier_dp.resnet18_sram_budget",
+        batched=lambda: fusion.frontier_dp_min_bw(
+            rn, sram_budget_words=budget_rn
+        ),
+        scalar=lambda: fusion.beam_merge_cuts(
+            rn, sram_budget_words=budget_rn
+        ),
+        compare="cost_le",
+    )
+
     record = {
         "bench": "search",
         "smoke": args.smoke,
@@ -187,7 +237,11 @@ def main() -> None:
             "memos, what repeated searches in a flow pay); speedup_cold = "
             "scalar_s / batched_cold_s (first call, full pipeline incl. "
             "memo build — the honest number for one-shot use; the merge "
-            "searches have no memo, so for them the two agree)"
+            "searches have no memo, so for them the two agree).  The "
+            "frontier_dp.* cases baseline against what they supersede: "
+            "the 2^E flat enumeration (encoder_decoder, cost asserted "
+            "bit-identical) or beam search (resnet18, exact asserted <= "
+            "heuristic)"
         ),
         "graphs": {
             "residual_block": {"nodes": len(rb.nodes), "edges": rb.n_edges},
@@ -202,8 +256,18 @@ def main() -> None:
     acceptance = {
         c["name"]: f"{c['speedup']}x steady-state / {c['speedup_cold']}x cold"
         for c in bench.cases
-        if c["name"] in ("brute_force.residual_block", "beam.resnet18")
+        if c["name"] in (
+            "brute_force.residual_block",
+            "beam.resnet18",
+            "frontier_dp.encoder_decoder",
+        )
     }
+    dp_ed = next(
+        c for c in bench.cases if c["name"] == "frontier_dp.encoder_decoder"
+    )
+    assert dp_ed["speedup_cold"] > 1.0, (
+        "frontier DP must beat cold 2^21 enumeration wall-clock"
+    )
     print(f"[bench_search] acceptance speedups: {acceptance}")
 
 

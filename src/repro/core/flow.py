@@ -63,6 +63,11 @@ class FlowResult:
     compile_seconds: float  # XLA compile paid by this call (0 on cache hit)
     sweep_seconds: float  # the single timed execution
     candidates_per_second: float
+    # Provenance of the grouping candidates: "exhaustive" / "pool" /
+    # "explicit", or — for groupings="search"/"dp" — the engine that
+    # produced the search optimum ("chain_dp" / "frontier_dp" / "beam"),
+    # so callers know whether the swept optimum is certified exact.
+    search_engine: str = ""
 
     def describe(self) -> str:
         return (
@@ -74,7 +79,8 @@ class FlowResult:
             f"({self.n_feasible}/{self.n_candidates} feasible, "
             f"{self.n_pruned} pruned, "
             f"{self.candidates_per_second:,.0f} cand/s, "
-            f"compile {self.compile_seconds*1e3:.0f} ms)"
+            f"compile {self.compile_seconds*1e3:.0f} ms, "
+            f"groupings={self.search_engine})"
         )
 
 
@@ -172,6 +178,7 @@ def _best_flow_result(
     compile_seconds: float,
     sweep_seconds: float,
     candidates_per_second: float,
+    search_engine: str = "",
     err_prefix: str = "",
 ) -> FlowResult:
     """Constraint filter + min-energy argmin over one graph's sweep output —
@@ -197,6 +204,7 @@ def _best_flow_result(
         compile_seconds=compile_seconds,
         sweep_seconds=sweep_seconds,
         candidates_per_second=candidates_per_second,
+        search_engine=search_engine,
     )
 
 
@@ -205,23 +213,34 @@ def groupings_batch(
     groupings: str | np.ndarray,
     *,
     sram_budget_words: float = float("inf"),
-) -> np.ndarray:
+    with_provenance: bool = False,
+) -> np.ndarray | tuple[np.ndarray, str]:
     """Resolve a groupings spec to a (C, E) boolean cut batch.
 
     ``"exhaustive"`` — all valid edge cuts (2^(L-1) on a chain);
     ``"pool"``       — the paper's pool-boundary policy + layer-by-layer;
     ``"search"``/``"dp"`` — the grouping search optimum (chain DP fast path,
-    exhaustive or beam on DAGs) + layer-by-layer + pool boundaries;
+    frontier DP — exact even on ResNet-scale DAGs — or beam fallback) +
+    layer-by-layer + pool boundaries;
     or an explicit (C, E) bool array.  ``sram_budget_words`` is threaded
     into the search strategies so a budget-constrained flow searches under
     the same budget its prefilter enforces (a budget-blind optimum would
-    just be pruned afterwards).
+    just be pruned afterwards).  With ``with_provenance`` the batch comes
+    back paired with the grouping provenance string (for "search"/"dp"
+    the engine that produced the optimum, see
+    :attr:`repro.core.fusion.DPResult.engine`).
     """
+
+    def _ret(batch: np.ndarray, provenance: str):
+        return (batch, provenance) if with_provenance else batch
+
     if not isinstance(groupings, str):
-        return np.atleast_2d(np.asarray(groupings, dtype=bool))
+        return _ret(
+            np.atleast_2d(np.asarray(groupings, dtype=bool)), "explicit"
+        )
     if groupings == "exhaustive":
         try:
-            return fusion.enumerate_valid_edge_cuts(g)
+            return _ret(fusion.enumerate_valid_edge_cuts(g), "exhaustive")
         except ValueError as e:
             raise ValueError(
                 f"{g.name}: {e}; pass groupings='search' for large graphs"
@@ -230,17 +249,23 @@ def groupings_batch(
         # np.unique-dedupe like the "search" path: on graphs where the pool
         # policy degenerates to layer-by-layer (e.g. every producer ends a
         # pooling stage) the duplicate row must not be scored twice.
-        return np.unique(
-            np.stack([g.pool_boundary_cuts(), fusion.layer_by_layer_cuts(g)]),
-            axis=0,
+        return _ret(
+            np.unique(
+                np.stack(
+                    [g.pool_boundary_cuts(), fusion.layer_by_layer_cuts(g)]
+                ),
+                axis=0,
+            ),
+            "pool",
         )
     if groupings in ("dp", "search"):
+        best = fusion.optimal_cuts(g, sram_budget_words=sram_budget_words)
         rows = [
-            fusion.optimal_cuts(g, sram_budget_words=sram_budget_words).cuts,
+            best.cuts,
             fusion.layer_by_layer_cuts(g),
             g.pool_boundary_cuts(),
         ]
-        return np.unique(np.stack(rows), axis=0)
+        return _ret(np.unique(np.stack(rows), axis=0), best.engine)
     raise ValueError(groupings)
 
 
@@ -281,8 +306,9 @@ def run_flow(
     if config_space is None:
         config_space = default_config_space()
     g = as_graph(ir)
-    cuts_batch = groupings_batch(
-        g, groupings, sram_budget_words=sram_budget_words
+    cuts_batch, provenance = groupings_batch(
+        g, groupings, sram_budget_words=sram_budget_words,
+        with_provenance=True,
     )
 
     n_pruned = 0
@@ -344,6 +370,7 @@ def run_flow(
         compile_seconds=compile_seconds,
         sweep_seconds=sweep_seconds,
         candidates_per_second=n_cand / max(sweep_seconds, 1e-9),
+        search_engine=provenance,
     )
 
 
@@ -414,11 +441,14 @@ def run_fleet(
               for g in graphs]
     cuts: list[np.ndarray] = []
     pruned: list[int] = []
+    provenances: list[str] = []
     for g, pg in zip(graphs, padded):
-        cb = pad_cuts_batch(
-            groupings_batch(g, groupings, sram_budget_words=sram_budget_words),
-            edge_bucket,
+        cb, provenance = groupings_batch(
+            g, groupings, sram_budget_words=sram_budget_words,
+            with_provenance=True,
         )
+        cb = pad_cuts_batch(cb, edge_bucket)
+        provenances.append(provenance)
         n_pruned = 0
         if np.isfinite(sram_budget_words):
             keep = fusion.padded_feasible_mask_batch(pg, cb, sram_budget_words)
@@ -466,6 +496,7 @@ def run_fleet(
                 compile_seconds=0.0,  # the one fleet compile, see FleetResult
                 sweep_seconds=sweep_seconds,
                 candidates_per_second=fleet_cps,  # the shared execution rate
+                search_engine=provenances[gi],
                 err_prefix=f"{g.name}: ",
             )
         )

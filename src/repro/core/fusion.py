@@ -41,6 +41,13 @@ Strategies, all returning cut vectors compatible with
   same per-group quantity, so one DP minimises all three simultaneously;
   buffer feasibility is a per-group predicate.  Tests cross-check DP ==
   brute force on random chains.
+* ``frontier_dp_min_bw``   — exact frontier-state DP for general DAGs: a
+  topological sweep whose states are keyed by the open-group membership,
+  paid-write flags, and quotient-reachability closure of the *frontier*
+  (processed nodes with pending out-edges), with dominance pruning and a
+  branch-and-bound lower bound.  Scales with the DAG's frontier width
+  instead of 2^E — bit-identical minima to brute force, at ResNet-18 scale
+  (2^38 patterns) in milliseconds.  See the section comment above it.
 * ``greedy_merge_cuts`` / ``beam_merge_cuts`` — bottom-up group merging for
   general DAGs (bandwidth is monotone non-increasing under a valid merge,
   so merging is the natural move; the SRAM budget and convexity are what
@@ -49,8 +56,10 @@ Strategies, all returning cut vectors compatible with
   canonical label state, and scores it with one batched validity /
   feasibility / bandwidth pass.  Cross-checked against brute force on
   random DAGs in tests.
-* ``optimal_cuts`` — dispatch: chain DP fast path, exhaustive enumeration
-  for small DAGs, beam search otherwise.
+* ``optimal_cuts`` — dispatch: chain DP fast path, frontier DP (exact, up
+  to a frontier-width cap), exhaustive enumeration for small-but-wide
+  DAGs, beam search only for large-and-wide ones; results carry ``engine``
+  provenance so callers can tell certified optima from heuristics.
 """
 from __future__ import annotations
 
@@ -65,8 +74,11 @@ from .ir import (
     NetworkIR,
     as_graph,
     canonicalize_labels_batch,
+    min_width_topo_order,
     quotient_acyclic_batch,
     scc_labels,
+    topo_frontier_sets,
+    topo_frontier_width,
     uncut_component_labels,
     _min_label_reps_batch,
 )
@@ -79,6 +91,25 @@ MAX_EXHAUSTIVE_EDGES = 22
 # Rows per chunk of the enumeration pipeline — bounds peak memory at
 # ~chunk x L for the label/peeling intermediates.
 ENUM_CHUNK_ROWS = 1 << 17
+# Below this many bit patterns the per-pattern scalar filter beats the
+# batched pipeline's cold setup (graph-array build + batch labelling +
+# vectorised peeling all cost ~1 ms flat; the scalar filter is ~20 us per
+# pattern), so tiny graphs dispatch straight to the preserved scalar path
+# — BENCH_search.json showed 0.22x/0.4x *cold* "speedups" on the
+# 16-candidate residual block before this threshold existed.
+SMALL_ENUM_PATTERNS = 64
+# Frontier-DP caps: beyond this frontier width (or live-state count) the
+# exact DP abandons the attempt and `optimal_cuts` falls back to beam
+# search.  Real network DAGs are narrow (ResNet-18: 2, encoder-decoder: 3);
+# the caps only trip on adversarially dense random graphs.
+FRONTIER_DP_MAX_WIDTH = 12
+FRONTIER_DP_MAX_STATES = 1 << 17
+
+
+class FrontierTooWide(ValueError):
+    """Raised by :func:`frontier_dp_min_bw` when the frontier width or the
+    live state count exceeds its caps; :func:`optimal_cuts` absorbs it and
+    falls back to exhaustive enumeration (small graphs) or beam search."""
 
 
 def enumerate_cuts(n_layers: int) -> np.ndarray:
@@ -214,6 +245,9 @@ def enumerate_valid_edge_cuts(
     """All valid edge-cut vectors, shape (C, E), dtype bool (read-only).
 
     Chains short-circuit to :func:`enumerate_cuts` (every vector is valid);
+    tiny DAGs (at most ``SMALL_ENUM_PATTERNS`` bit patterns) run the
+    preserved per-pattern scalar filter directly — identical output in
+    identical order, without the batched pipeline's ~1 ms cold setup;
     general DAGs push the 2^E bit patterns through the batched validity
     pipeline in chunks of ``chunk_rows`` (ascending pattern order, so the
     output ordering is identical to the per-pattern scalar filter).  The
@@ -232,6 +266,8 @@ def enumerate_valid_edge_cuts(
             )
         if E == 0:
             out = np.zeros((1, 0), dtype=bool)
+        elif (1 << E) <= SMALL_ENUM_PATTERNS:
+            out = _enumerate_valid_edge_cuts_scalar(g)
         else:
             out = np.concatenate(
                 [
@@ -369,6 +405,15 @@ class DPResult:
     cuts: np.ndarray
     group_cost_words: float  # Eq. (1) minus the grouping-independent weights
     n_groups: int
+    # Which engine produced the answer ("chain_dp", "frontier_dp",
+    # "exhaustive", "greedy", "beam", ...) and whether the result carries an
+    # optimality guarantee — the provenance `optimal_cuts` callers use to
+    # tell an exact optimum from a heuristic.
+    engine: str = ""
+
+    @property
+    def exact(self) -> bool:
+        return self.engine in ("chain_dp", "frontier_dp", "exhaustive")
 
 
 def optimal_cuts_dp(
@@ -426,7 +471,8 @@ def optimal_cuts_dp(
     bounds.reverse()
     groups = [list(range(i, j)) for i, j in bounds]
     cuts = cuts_from_groups(groups, L)
-    return DPResult(cuts=cuts, group_cost_words=float(dp[L]), n_groups=len(groups))
+    return DPResult(cuts=cuts, group_cost_words=float(dp[L]),
+                    n_groups=len(groups), engine="chain_dp")
 
 
 def _graph_cost(g: GraphIR, cuts: np.ndarray) -> float:
@@ -496,7 +542,8 @@ def brute_force_min_bw(
     best_cuts = cuts_all[j].copy()
     n_groups = int(cut_group_labels(g, best_cuts).max()) + 1
     return DPResult(
-        cuts=best_cuts, group_cost_words=float(costs[j]), n_groups=n_groups
+        cuts=best_cuts, group_cost_words=float(costs[j]), n_groups=n_groups,
+        engine="exhaustive",
     )
 
 
@@ -523,7 +570,299 @@ def _brute_force_min_bw_scalar(
             best_groups = int(labels.max()) + 1
     if best_cuts is None:
         raise ValueError("no feasible grouping under the SRAM budget")
-    return DPResult(cuts=best_cuts, group_cost_words=best_cost, n_groups=best_groups)
+    return DPResult(cuts=best_cuts, group_cost_words=best_cost,
+                    n_groups=best_groups, engine="exhaustive_scalar")
+
+
+# ---------------------------------------------------------------------------
+# Frontier-state DP — exact search beyond the 2^E enumeration wall
+# ---------------------------------------------------------------------------
+#
+# Flat enumeration scores all 2^E cut patterns, so it dies at
+# MAX_EXHAUSTIVE_EDGES = 22 (ResNet-18 has 38).  But the *future* of a
+# partial grouping only depends on the partition of the **frontier** — the
+# already-processed nodes that still have an edge into the unprocessed
+# suffix — not on how the closed part of the graph was grouped.  Sweeping
+# nodes in topological order and folding every partial grouping into its
+# frontier signature turns the 2^E search into a DP whose state count is
+# governed by the frontier *width* (3 on ResNet-18, 4 on the
+# encoder-decoder), the same structural move LoopTree makes for the
+# fused-loop design space.
+#
+# A state signature is exactly the information the future can observe:
+#
+# * the open-group membership of each frontier node (canonical labels);
+# * one "paid" bit per frontier node — whether its output frame write has
+#   already been charged (a node's out_words is charged once, at its first
+#   cut out-edge), so future cut edges know their marginal cost;
+# * the transitive reachability closure among open groups (as per-group
+#   bitmasks), which is what incremental convexity checking needs: a new
+#   arc A -> g closes a quotient cycle iff g already reaches A, and merging
+#   two open groups is legal iff neither reaches the other (a path of
+#   length >= 1 would either internalise a cut edge or close a cycle).
+#   Paths through *closed* groups are composed into the closure before the
+#   closed group's row/column is dropped — a closed group's arc set is
+#   final (all of its nodes' edges are decided), so the projection is
+#   lossless.
+#
+# Buffer feasibility needs no state at all: graph_max_intermediate is a max
+# of per-node terms, each of which is decided exactly once (a node's
+# internal-input sum when its in-edges are decided; a producer's pre-pool
+# frame at its first uncut out-edge), so every term is checked against the
+# budget the moment it is determined.
+#
+# Two states with identical signatures therefore have *identical* feasible
+# completions with identical future cost deltas — keeping only the cheapest
+# accumulated cost per signature (dominance) is lossless, and the DP's
+# minimum is bit-identical to brute force (all words are integer-valued
+# float64).  On top of dominance, a branch-and-bound prune drops states
+# whose accumulated cost plus an admissible remaining lower bound (the
+# unconditional sink writes of the unprocessed suffix, plus the cheapest
+# cut-word set any over-budget node is forced to pay; every other edge's
+# best case is uncut = free) already exceeds a greedy incumbent.
+#
+# Transition scoring is batched through the prefix-decomposable tables of
+# :func:`repro.core.metrics.graph_prefix_tables`: each step scores the
+# whole (states x 2^in_degree) grid of cut/no-cut extensions with numpy
+# (cut words, first-cut write charges, feasibility, bound) and only the
+# surviving transitions pay the per-candidate structural update.
+
+
+@dataclasses.dataclass
+class _DPState:
+    """One live frontier state (signature fields + accumulators)."""
+
+    labels: tuple[int, ...]  # group id per frontier node (canonical)
+    paid: int  # bitmask over frontier positions: out_words charged
+    reach: tuple[int, ...]  # per group: bitmask of groups it reaches
+    acc: float  # accumulated grouping-dependent words
+    cuts: np.ndarray  # (E,) decisions so far (undecided = False)
+
+
+def _forced_cut_words_min(words: np.ndarray, budget: float) -> float:
+    """Cheapest cut-word total that brings a node's uncut incoming sum
+    within the SRAM budget — the admissible per-node bound the DP's
+    branch-and-bound charges for over-budget joins (in-degrees are tiny, so
+    enumerating the 2^d subsets is cheaper than a knapsack)."""
+    d = len(words)
+    total = float(words.sum())
+    if d == 0 or total <= budget:
+        return 0.0
+    bits = ((np.arange(1 << d)[:, None] >> np.arange(d)) & 1).astype(bool)
+    cutw = bits @ words
+    ok = (total - cutw) <= budget
+    return float(cutw[ok].min())
+
+
+def frontier_dp_min_bw(
+    ir: NetworkIR | GraphIR,
+    *,
+    sram_budget_words: float = float("inf"),
+    max_width: int | None = FRONTIER_DP_MAX_WIDTH,
+    max_states: int = FRONTIER_DP_MAX_STATES,
+    order: "list[int] | None" = None,
+) -> DPResult:
+    """Exact min-bandwidth grouping via frontier-state DP (see the section
+    comment above for the state design and correctness argument).
+
+    Returns the same minimum ``group_cost_words`` as
+    :func:`brute_force_min_bw` (bit-identical: integer-valued words) on any
+    graph both can handle, but scales with the DAG's frontier width instead
+    of 2^E — ResNet-18's 38-edge space (2^38 patterns) solves exactly in
+    milliseconds.  Ties may resolve to a different (equally optimal) cut
+    vector than brute force's first-pattern rule.  Raises
+    :class:`FrontierTooWide` beyond ``max_width``/``max_states`` so
+    :func:`optimal_cuts` can fall back to beam search.
+    """
+    g = as_graph(ir)
+    ga = M.graph_arrays(g)
+    pt = M.graph_prefix_tables(g)
+    L, E = len(g.nodes), g.n_edges
+    budget = float(sram_budget_words)
+    finite = np.isfinite(budget)
+
+    if order is None:
+        order = list(range(L))
+        alt = min_width_topo_order(g)
+        if topo_frontier_width(g, alt) < topo_frontier_width(g, order):
+            order = alt
+    frontiers = topo_frontier_sets(g, order)
+    width = max((len(f) for f in frontiers), default=0)
+    if max_width is not None and width > max_width:
+        raise FrontierTooWide(
+            f"frontier width {width} exceeds the DP cap {max_width}"
+        )
+
+    # Admissible remaining-cost lower bounds, as suffixes of the sweep:
+    # unconditional sink writes + budget-forced cut-word minima.
+    node_lb = pt.sink_charge.copy()
+    if finite:
+        for v in range(L):
+            node_lb[v] += _forced_cut_words_min(pt.in_words[v], budget)
+    suffix_lb = np.zeros(L + 1)
+    suffix_lb[:L] = np.cumsum(node_lb[order][::-1])[::-1]
+
+    # Greedy incumbent for the branch-and-bound prune (always feasible:
+    # greedy starts from the always-valid, zero-footprint all-cut state).
+    incumbent = greedy_merge_cuts(g, sram_budget_words=budget).group_cost_words
+    const0 = pt.const_words
+
+    states: "dict[tuple, _DPState]" = {
+        ((), 0, ()): _DPState((), 0, (), 0.0, np.zeros(E, dtype=bool))
+    }
+    for t, v in enumerate(order):
+        frontier = frontiers[t - 1] if t else []
+        pos_of = {u: i for i, u in enumerate(frontier)}
+        ks = pt.in_edges[v]
+        srcs = pt.in_srcs[v]
+        w = pt.in_words[v]
+        d = len(ks)
+        src_pos = np.asarray([pos_of[int(u)] for u in srcs], dtype=np.int64)
+
+        bits = ((np.arange(1 << d)[:, None] >> np.arange(d)) & 1).astype(bool)
+        cutw = bits @ w if d else np.zeros(1)
+        feas_p = np.ones(1 << d, dtype=bool)
+        if finite and d:
+            feas_p &= (float(w.sum()) - cutw) <= budget
+            # an uncut out-edge pins the producer's pre-pool frame on chip
+            ok_uncut = pt.prepool_words[srcs] <= budget
+            feas_p &= (bits | ok_uncut[None, :]).all(axis=1)
+
+        state_list = list(states.values())
+        accs = np.asarray([s.acc for s in state_list])
+        if d:
+            paid_mat = (
+                np.asarray([s.paid for s in state_list])[:, None]
+                >> src_pos[None, :]
+            ) & 1
+            first_cut = bits[None, :, :] & ~paid_mat[:, None, :].astype(bool)
+            extra = first_cut @ pt.out_words[srcs]  # (S, P) write charges
+        else:
+            extra = np.zeros((len(state_list), 1))
+        delta = cutw[None, :] + extra + float(pt.sink_charge[v])
+        keep = feas_p[None, :] & (
+            accs[:, None] + delta + const0 + suffix_lb[t + 1] <= incumbent
+        )
+
+        new_frontier = frontiers[t]
+        new_states: "dict[tuple, _DPState]" = {}
+        for si in range(len(state_list)):
+            if not keep[si].any():
+                continue
+            st = state_list[si]
+            lab, reach = st.labels, st.reach
+            G = len(reach)
+            for p in np.flatnonzero(keep[si]):
+                cut_i = [i for i in range(d) if bits[p, i]]
+                uncut_i = [i for i in range(d) if not bits[p, i]]
+                Sg = {lab[src_pos[i]] for i in uncut_i}
+                Sg_mask = 0
+                for a in Sg:
+                    Sg_mask |= 1 << a
+                # merging two open groups with any path between them would
+                # internalise a cut edge or close a quotient cycle
+                if any(reach[a] & (Sg_mask & ~(1 << a)) for a in Sg):
+                    continue
+                out_new = 0
+                for a in Sg:
+                    out_new |= reach[a]
+                A_set = {lab[src_pos[i]] for i in cut_i}
+                # a cut edge from a group being merged into v's group would
+                # be internal (consistency); an arc A -> g_new with
+                # g_new ~> A closes a cycle (convexity)
+                if any(a in Sg or (out_new >> a) & 1 for a in A_set):
+                    continue
+
+                # --- structural update: merge, add arcs, keep the closure
+                gid = G  # temporary id of v's (possibly merged) group
+                reach2 = list(reach) + [out_new]
+                for X in range(G):
+                    if X in Sg:
+                        continue
+                    r = reach2[X]
+                    if r & Sg_mask:  # X reached a merged member
+                        reach2[X] = (r & ~Sg_mask) | (1 << gid) | out_new
+                add_mask = (1 << gid) | out_new
+                for A in A_set:
+                    for X in range(G):
+                        if X in Sg:
+                            continue
+                        if X == A or (reach2[X] >> A) & 1:
+                            reach2[X] |= add_mask
+
+                # --- project onto the new frontier: close groups with no
+                # frontier nodes, relabel canonically, remap the closure
+                raw = []
+                for u in new_frontier:
+                    if u == v:
+                        raw.append(gid)
+                    else:
+                        a = lab[pos_of[u]]
+                        raw.append(gid if a in Sg else a)
+                remap: dict[int, int] = {}
+                labs_new = []
+                for a in raw:
+                    if a not in remap:
+                        remap[a] = len(remap)
+                    labs_new.append(remap[a])
+                reach_new = [0] * len(remap)
+                for a_old, a_new in remap.items():
+                    r = reach2[a_old]
+                    rr = 0
+                    for b_old, b_new in remap.items():
+                        if (r >> b_old) & 1:
+                            rr |= 1 << b_new
+                    reach_new[a_new] = rr
+
+                newly_paid = {int(srcs[i]) for i in cut_i}
+                paid_new = 0
+                for j, u in enumerate(new_frontier):
+                    if u == v:
+                        continue
+                    if (st.paid >> pos_of[u]) & 1 or u in newly_paid:
+                        paid_new |= 1 << j
+
+                sig = (tuple(labs_new), paid_new, tuple(reach_new))
+                acc_new = st.acc + float(delta[si, p])
+                cur = new_states.get(sig)
+                if cur is None or acc_new < cur.acc:
+                    cuts_new = st.cuts.copy()
+                    if cut_i:
+                        cuts_new[ks[cut_i]] = True
+                    new_states[sig] = _DPState(
+                        tuple(labs_new), paid_new, tuple(reach_new),
+                        acc_new, cuts_new,
+                    )
+        if not new_states:
+            raise ValueError("no feasible grouping under the SRAM budget")
+        if len(new_states) > max_states:
+            raise FrontierTooWide(
+                f"{len(new_states)} live states exceed the DP cap {max_states}"
+            )
+        states = new_states
+
+    best = min(states.values(), key=lambda s: s.acc)
+    labels = cut_group_labels(g, best.cuts)
+    return DPResult(
+        cuts=best.cuts,
+        group_cost_words=const0 + best.acc,
+        n_groups=int(labels.max()) + 1,
+        engine="frontier_dp",
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def _frontier_dp_cached(g: GraphIR, sram_budget_words: float) -> "DPResult | None":
+    """Per-(graph, budget) memo for the dispatch path: repeated searches in
+    a flow/fleet are a cache hit, mirroring the `_exhaustive_tables` memo
+    the enumeration path enjoys.  Callers get a fresh ``cuts`` copy.
+    A :class:`FrontierTooWide` decline is memoised as ``None`` (lru_cache
+    does not cache exceptions), so a too-wide graph pays the failed DP
+    attempt once, not on every dispatch."""
+    try:
+        return frontier_dp_min_bw(g, sram_budget_words=sram_budget_words)
+    except FrontierTooWide:
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -707,6 +1046,7 @@ def greedy_merge_cuts(
         cuts=cuts_from_labels(g, labels),
         group_cost_words=cost,
         n_groups=int(labels.max()) + 1,
+        engine="greedy",
     )
 
 
@@ -751,6 +1091,7 @@ def beam_merge_cuts(
         cuts=cuts_from_labels(g, labels),
         group_cost_words=best_cost,
         n_groups=int(labels.max()) + 1,
+        engine="beam",
     )
 
 
@@ -801,6 +1142,7 @@ def _greedy_merge_cuts_scalar(
         cuts=cuts_from_labels(g, labels),
         group_cost_words=cost,
         n_groups=int(labels.max()) + 1,
+        engine="greedy_scalar",
     )
 
 
@@ -833,6 +1175,7 @@ def _beam_merge_cuts_scalar(
         cuts=cuts_from_labels(g, labels),
         group_cost_words=best_cost,
         n_groups=int(labels.max()) + 1,
+        engine="beam_scalar",
     )
 
 
@@ -842,13 +1185,24 @@ def optimal_cuts(
     sram_budget_words: float = float("inf"),
     beam_width: int = 32,
 ) -> DPResult:
-    """Grouping search dispatch: chain DP fast path; exhaustive enumeration
-    for small DAGs (up to ``MAX_EXHAUSTIVE_EDGES`` = 22 edges, batched);
-    beam merge otherwise."""
+    """Grouping search dispatch: chain DP fast path; frontier-state DP for
+    general DAGs (exact at any edge count, up to a frontier-width cap —
+    ResNet-18's 2^38 space included); when the DAG is too wide for the DP,
+    small graphs keep their certified optimum via exhaustive enumeration
+    and only large-and-wide graphs fall back to beam merge.  The returned
+    :class:`DPResult` carries ``engine`` provenance ("chain_dp" /
+    "frontier_dp" / "exhaustive" / "beam") and ``exact`` so callers can
+    tell a certified optimum from a heuristic answer."""
     g = as_graph(ir)
     if g.is_chain:
         return optimal_cuts_dp(g, sram_budget_words=sram_budget_words)
-    if g.n_edges <= MAX_EXHAUSTIVE_EDGES and len(g.nodes) <= MAX_EXHAUSTIVE_LAYERS:
+    res = _frontier_dp_cached(g, float(sram_budget_words))
+    if res is not None:
+        return dataclasses.replace(res, cuts=res.cuts.copy())
+    if (
+        g.n_edges <= MAX_EXHAUSTIVE_EDGES
+        and len(g.nodes) <= MAX_EXHAUSTIVE_LAYERS
+    ):
         return brute_force_min_bw(g, sram_budget_words=sram_budget_words)
     return beam_merge_cuts(
         g, beam_width=beam_width, sram_budget_words=sram_budget_words

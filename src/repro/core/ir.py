@@ -802,6 +802,109 @@ def quotient_acyclic_batch(
     return out
 
 
+# ---------------------------------------------------------------------------
+# Topological elimination orders and frontier width (for the frontier DP)
+# ---------------------------------------------------------------------------
+#
+# The frontier-state fusion DP (:func:`repro.core.fusion.frontier_dp_min_bw`)
+# sweeps nodes in a topological order; its state space is governed by the
+# *frontier width* — the largest number of already-processed nodes that still
+# have an edge into the unprocessed suffix at any point of the sweep.  Any
+# topological order yields the same optimum (cost accounting is
+# order-independent); a narrower order just keeps the DP small, so the
+# search picks the better of the natural node order and a greedy
+# width-minimising order.
+
+
+def topo_frontier_sets(
+    g: GraphIR, order: Sequence[int] | None = None
+) -> list[list[int]]:
+    """Frontier after each step of a topological sweep.
+
+    ``out[t]`` lists (ascending node ids) the nodes among ``order[: t + 1]``
+    that still have >= 1 edge to a node outside that prefix — exactly the
+    nodes whose pending out-edges the frontier DP has yet to decide.  The
+    last entry is always empty.  ``order`` defaults to the natural node
+    order (topological by construction: every edge has ``src < dst``) and
+    must itself be topological.
+    """
+    L = len(g.nodes)
+    order = list(range(L)) if order is None else [int(i) for i in order]
+    if sorted(order) != list(range(L)):
+        raise ValueError("order must be a permutation of the node ids")
+    pos = [0] * L
+    for t, v in enumerate(order):
+        pos[v] = t
+    succs: list[list[int]] = [[] for _ in range(L)]
+    for e in g.edges:
+        if pos[e.src] >= pos[e.dst]:
+            raise ValueError(
+                f"order is not topological: edge {e.src}->{e.dst}"
+            )
+        succs[e.src].append(e.dst)
+    out: list[list[int]] = []
+    for t in range(L):
+        frontier = [
+            u
+            for u in sorted(order[: t + 1])
+            if any(pos[w] > t for w in succs[u])
+        ]
+        out.append(frontier)
+    return out
+
+
+def topo_frontier_width(g: GraphIR, order: Sequence[int] | None = None) -> int:
+    """Largest frontier of a topological sweep (0 for a single node)."""
+    return max((len(f) for f in topo_frontier_sets(g, order)), default=0)
+
+
+def min_width_topo_order(g: GraphIR) -> list[int]:
+    """Greedy width-minimising topological order.
+
+    At each step, among the ready nodes (all predecessors processed), pick
+    the one whose processing leaves the smallest frontier, tie-broken by
+    node id — deterministic, and never worse than fanning out breadth-first.
+    A heuristic (minimum-width elimination ordering is NP-hard); callers
+    compare its width against the natural order and keep the narrower.
+    """
+    L = len(g.nodes)
+    succs: list[list[int]] = [[] for _ in range(L)]
+    n_pred = [0] * L
+    for e in g.edges:
+        succs[e.src].append(e.dst)
+        n_pred[e.dst] += 1
+    ready = sorted(i for i in range(L) if n_pred[i] == 0)
+    pending_out = [len(s) for s in succs]  # edges into the unprocessed suffix
+    frontier: set[int] = set()
+    order: list[int] = []
+    preds: list[list[int]] = [[] for _ in range(L)]
+    for e in g.edges:
+        preds[e.dst].append(e.src)
+
+    def width_after(v: int) -> int:
+        w = len(frontier) + (1 if pending_out[v] else 0)
+        for u in preds[v]:
+            if pending_out[u] == 1:  # (u, v) was u's last pending edge
+                w -= 1
+        return w
+
+    while ready:
+        v = min(ready, key=lambda u: (width_after(u), u))
+        ready.remove(v)
+        order.append(v)
+        for u in preds[v]:
+            pending_out[u] -= 1
+            if pending_out[u] == 0:
+                frontier.discard(u)
+        if pending_out[v]:
+            frontier.add(v)
+        for w in succs[v]:
+            n_pred[w] -= 1
+            if n_pred[w] == 0:
+                ready.append(w)
+    return order
+
+
 def scc_labels(n: int, arcs: set[tuple[int, int]]) -> list[int]:
     """Strongly-connected-component id per vertex (iterative Kosaraju)."""
     adj: list[list[int]] = [[] for _ in range(n)]

@@ -324,6 +324,63 @@ def graph_arrays(g: GraphIR) -> GraphArrays:
     return ga
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefixCostTables:
+    """Per-node views of the grouping-dependent Eq. (1) terms, organised so
+    the cost of a *prefix* of edge decisions is exactly decomposable.
+
+    Sweeping nodes in any topological order and deciding each node's
+    incoming edges as it arrives, Eq. (1) bandwidth (minus the
+    grouping-independent weights, captured in ``const_words``) accumulates
+    in exact per-decision increments:
+
+    * a cut edge adds its ``words`` (the consumer's DRAM read-back), plus
+      the producer's ``out_words`` **iff** this is the producer's first cut
+      out-edge (the output frame is written once however many cut
+      consumers it feeds);
+    * a sink node adds its ``sink_charge`` unconditionally when processed;
+    * an uncut edge adds nothing — but its words join the consumer's
+      internal-input sum and put the producer's ``prepool_words`` frame on
+      chip, the two Eq. (4)-style terms ``graph_max_intermediate`` bounds.
+
+    This is the table set behind the frontier-state DP
+    (:func:`repro.core.fusion.frontier_dp_min_bw`): all quantities are
+    integer-valued float64 words, so the accumulated cost is bit-identical
+    to :func:`bandwidth_ref` minus the weights, not approximately equal.
+    """
+
+    in_edges: tuple[np.ndarray, ...]  # per node: incoming edge indices
+    in_srcs: tuple[np.ndarray, ...]  # per node: those edges' producers
+    in_words: tuple[np.ndarray, ...]  # per node: those edges' words
+    out_words: np.ndarray  # (L,) output frame (post-pool) words
+    prepool_words: np.ndarray  # (L,) on-chip pre-pool frame words
+    sink_charge: np.ndarray  # (L,) out_words where sink else 0.0
+    const_words: float  # sources + ext reads (Eq. (1) minus weights)
+
+
+def graph_prefix_tables(g: GraphIR) -> PrefixCostTables:
+    """Per-instance memo of :class:`PrefixCostTables` (same discipline as
+    :func:`graph_arrays`: GraphIR is immutable, so this can never go
+    stale)."""
+    pt = g.__dict__.get("_prefix_tables")
+    if pt is not None:
+        return pt
+    ga = graph_arrays(g)
+    L = len(g.nodes)
+    in_edges = tuple(np.flatnonzero(ga.edst == i) for i in range(L))
+    pt = PrefixCostTables(
+        in_edges=in_edges,
+        in_srcs=tuple(ga.esrc[ks] for ks in in_edges),
+        in_words=tuple(ga.ewords[ks] for ks in in_edges),
+        out_words=ga.feat[:, F_OUT].copy(),
+        prepool_words=ga.feat[:, F_OUT_PRE].copy(),
+        sink_charge=np.where(ga.sink_mask, ga.feat[:, F_OUT], 0.0),
+        const_words=ga.base_bw - float(ga.feat[:, F_W].sum()),
+    )
+    object.__setattr__(g, "_prefix_tables", pt)
+    return pt
+
+
 def bandwidth_batch_graph(
     ir: NetworkIR | GraphIR, cuts_batch: np.ndarray
 ) -> np.ndarray:

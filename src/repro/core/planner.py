@@ -40,8 +40,9 @@ def _block_bandwidths(
     ffn_act: str,
     n_experts: int,
     top_k: int,
-) -> tuple[float, float]:
-    """(layer-by-layer, fused) Eq. (1) bandwidth of one transformer block.
+) -> tuple[float, float, str]:
+    """(layer-by-layer, fused, engine) Eq. (1) bandwidth of one transformer
+    block plus the search-engine provenance of the fused grouping.
 
     Memoised on the block-shaping config fields + seq_len: building the
     block IR and running ``optimal_cuts`` dominate ``plan_model``, and every
@@ -60,7 +61,7 @@ def _block_bandwidths(
     bws = M.bandwidth_batch_graph(
         block_ir, np.stack([fusion.layer_by_layer_cuts(block_ir), dp.cuts])
     )
-    return float(bws[0]), float(bws[1])
+    return float(bws[0]), float(bws[1]), dp.engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +86,9 @@ class FusionPlan:
     # evaluator outputs
     bw_fused_words: float
     bw_lbl_words: float
+    # grouping-search provenance ("chain_dp" for transformer block chains;
+    # "frontier_dp"/"beam" would signal a DAG-shaped block IR)
+    search_engine: str = ""
 
     @property
     def bw_saving(self) -> float:
@@ -144,7 +148,7 @@ def plan_model(cfg, seq_len: int, spec: TPUSpec = TPU_V5E) -> FusionPlan:
     # handles residual DAGs drives kernel selection here (chain DP fast
     # path); memoised per (cfg shape, seq_len) so repeated planning of the
     # same model is an evaluator-cache hit.
-    lbl, fused = _block_bandwidths(
+    lbl, fused, engine = _block_bandwidths(
         cfg.name, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
         max(cfg.d_ff, 1), seq_len, cfg.ffn_act, cfg.n_experts, cfg.top_k,
     )
@@ -165,4 +169,5 @@ def plan_model(cfg, seq_len: int, spec: TPUSpec = TPU_V5E) -> FusionPlan:
         conv_block_c=64,
         bw_fused_words=fused,
         bw_lbl_words=lbl,
+        search_engine=engine,
     )

@@ -80,8 +80,36 @@ def repair_spec(spec, shape, axis_size) -> "P":
     return P(*out)
 
 
+def _ambient_mesh_auto_axes():
+    """(mesh, auto axis names) of the ambient mesh, across jax versions.
+
+    jax >= 0.5 exposes ``jax.sharding.get_abstract_mesh()`` with per-axis
+    ``AxisType`` (Manual axes inside shard_map must not be pinned); on
+    jax 0.4.x the ambient mesh is the ``with mesh:`` context mesh from
+    ``thread_resources`` and every axis is implicitly auto.  Outside any
+    mesh both paths return (None, ()).
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        am = get_am()
+        if am is None or not am.axis_names:
+            return None, ()
+        from jax.sharding import AxisType
+
+        return am, tuple(
+            n for n, t in zip(am.axis_names, am.axis_types)
+            if t == AxisType.Auto
+        )
+    from jax._src import mesh as mesh_lib
+
+    pm = mesh_lib.thread_resources.env.physical_mesh
+    if pm is None or pm.empty or not pm.axis_names:
+        return None, ()
+    return pm, tuple(pm.axis_names)
+
+
 def hint(x, *spec):
-    """``with_sharding_constraint`` against the ambient abstract mesh.
+    """``with_sharding_constraint`` against the ambient (abstract) mesh.
 
     Model code calls ``hint(q, DP, None, TP, None)``; axes absent from the
     current mesh are dropped, indivisible placements are repaired
@@ -89,14 +117,10 @@ def hint(x, *spec):
     this is a no-op.  This is how the models pin the shardings GSPMD cannot
     infer through reshapes (e.g. splitting the head axis into KV groups).
     """
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
+    am, names = _ambient_mesh_auto_axes()
+    if am is None:
         return x
-    from jax.sharding import AxisType
-
-    names = {
-        n for n, t in zip(am.axis_names, am.axis_types) if t == AxisType.Auto
-    }
+    names = set(names)
     if not names:  # fully inside shard_map (Manual axes): nothing to pin
         return x
 

@@ -188,12 +188,16 @@ def test_beam_bit_identical_encoder_decoder():
         fusion.beam_merge_cuts(ed),
         fusion._beam_merge_cuts_scalar(ed),
     )
-    # optimal_cuts now certifies the optimum exhaustively (21 edges <= 22);
-    # it can only match or beat the beam, and must agree on this graph.
+    # optimal_cuts certifies the optimum via the frontier DP; it can only
+    # match or beat the beam, and its minimum must be bit-identical to the
+    # exhaustive enumeration (on this graph the cuts agree too).
     opt = fusion.optimal_cuts(ed)
+    assert opt.engine == "frontier_dp" and opt.exact
     beam = fusion.beam_merge_cuts(ed)
     assert opt.group_cost_words <= beam.group_cost_words
-    np.testing.assert_array_equal(opt.cuts, fusion.brute_force_min_bw(ed).cuts)
+    bf = fusion.brute_force_min_bw(ed)
+    assert opt.group_cost_words == bf.group_cost_words
+    np.testing.assert_array_equal(opt.cuts, bf.cuts)
 
 
 # ---------------------------------------------------------------------------
@@ -241,8 +245,13 @@ def test_run_flow_search_groupings_respect_sram_budget():
     budget = 200_000.0
     res = run_flow(g, config_space=[PAPER_OPTIMAL_CONFIG], constraints=RELAXED,
                    groupings="search", sram_budget_words=budget)
-    want = fusion.beam_merge_cuts(g, sram_budget_words=budget)
+    # the search dispatch answers with the exact frontier DP, which can
+    # only match or beat the beam heuristic under the same budget
+    want = fusion.frontier_dp_min_bw(g, sram_budget_words=budget)
+    assert res.search_engine == "frontier_dp"
     assert res.best_metrics.bandwidth_words == M.bandwidth_ref(g, want.cuts)
+    beam = fusion.beam_merge_cuts(g, sram_budget_words=budget)
+    assert want.group_cost_words <= beam.group_cost_words
     assert fusion.graph_max_intermediate(g, res.best_cuts) <= budget
 
 
