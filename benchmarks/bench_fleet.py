@@ -43,6 +43,8 @@ try:  # running from a checkout without `pip install -e .`
 except ImportError:  # pragma: no cover
     sys.path.insert(0, str(ROOT / "src"))
 
+from machine_meta import machine_metadata
+
 
 def _workloads(smoke: bool):
     """name -> GraphIR for every in-repo workload (distinct shapes)."""
@@ -189,6 +191,7 @@ def main() -> None:
     record = {
         "bench": "fleet",
         "smoke": args.smoke,
+        "machine": machine_metadata(),
         "metric_note": (
             "cold_wall_s = first multi-model sweep in a fresh process "
             "(includes XLA compilation); steady_wall_s = the same sweep "

@@ -26,6 +26,7 @@ import time
 
 import numpy as np
 
+from machine_meta import machine_metadata
 from repro.core import fusion, metrics as M
 from repro.core.ir import encoder_decoder_ir, residual_block_ir, resnet18_ir
 
@@ -232,6 +233,7 @@ def main() -> None:
     record = {
         "bench": "search",
         "smoke": args.smoke,
+        "machine": machine_metadata(),
         "metric_note": (
             "speedup = scalar_s / batched_s (steady state: warm per-graph "
             "memos, what repeated searches in a flow pay); speedup_cold = "

@@ -183,6 +183,66 @@ def default_config_space(
     return out
 
 
+# SRAM banking presets for the design-space grid: splitting the frame
+# buffers into more banks shortens bitlines/wordlines, cutting per-access
+# energy (classic CACTI scaling; the paper's Sec. III constant 0.1 nJ is
+# the unified calibration).  Only ``e_sram_nj`` varies — area constants
+# stay shared across the space, which the sweep requires
+# (:func:`repro.core.metrics.area_consts_of_space`).
+SRAM_SPLITS = {
+    "unified": 0.1,
+    "banked2": 0.07,
+    "banked4": 0.05,
+}
+
+
+def config_space_grid(
+    *,
+    styles: Sequence[str] = ARCH_STYLES,
+    f1s: Sequence[int] = (2, 4, 8, 16),
+    f2s: Sequence[int] = (2, 4, 8, 16),
+    f3s: Sequence[int] = (2, 4, 8, 16),
+    f4s: Sequence[int] = (2, 4, 8, 16),
+    bus_widths: Sequence[int] = (2, 4, 8, 16),
+    sram_splits: Sequence[str] = ("unified", "banked4"),
+    pe_energy: str = "pe_cycle",
+) -> list[DLAConfig]:
+    """Parameterised design-space generator: PE-array shape x SRAM split x
+    DRAM bus width -> thousands of :class:`DLAConfig` points.
+
+    This grows the paper's handful of predefined configs into a
+    LoopTree-style explorable design space: the defaults yield 2560 points
+    (hsiao 4^4 + vwa 4^3 PE shapes, x4 bus widths, x2 SRAM splits), which
+    :func:`repro.core.flow.run_fleet` sweeps in one XLA program —
+    optionally sharded over a device mesh (``devices=``) since the
+    hardware axis is embarrassingly parallel.
+
+    ``bus_widths`` sets ``dram_words_per_cycle`` and should stay powers of
+    two: every latency division is then exact in float64, preserving the
+    sweep's bit-identity to the scalar oracles.  ``sram_splits`` are
+    :data:`SRAM_SPLITS` preset names varying the per-access SRAM energy;
+    area constants are deliberately NOT varied (the sweep shares one
+    area-consts vector across the hardware batch).  vwa PE blocks are
+    F2 x 3 by construction, so ``f3s`` applies to hsiao only.
+    """
+    out: list[DLAConfig] = []
+    for style in styles:
+        s_f3s = (3,) if style == "vwa" else f3s
+        for split in sram_splits:
+            e_sram = SRAM_SPLITS[split]
+            for bus in bus_widths:
+                for f1, f2, f3, f4 in itertools.product(f1s, f2s, s_f3s, f4s):
+                    out.append(
+                        DLAConfig(
+                            style, f1, f2, f3, f4,
+                            pe_energy=pe_energy,
+                            dram_words_per_cycle=bus,
+                            e_sram_nj=e_sram,
+                        )
+                    )
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Constraints (Sec. II-C / Sec. III)
 # ---------------------------------------------------------------------------

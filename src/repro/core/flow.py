@@ -30,6 +30,7 @@ from jax.experimental import enable_x64
 
 from . import fusion
 from . import metrics as M
+from ..parallel.sharding import hardware_mesh, mesh_fingerprint
 from .arch import Constraints, DLAConfig, default_config_space
 from .ir import (
     GraphIR,
@@ -68,6 +69,9 @@ class FlowResult:
     # produced the search optimum ("chain_dp" / "frontier_dp" / "beam"),
     # so callers know whether the swept optimum is certified exact.
     search_engine: str = ""
+    # (architecture x fusion plan) Pareto front over the feasible sweep,
+    # populated when the flow is asked for it (``pareto=True``).
+    pareto: "ParetoFront | None" = None
 
     def describe(self) -> str:
         return (
@@ -116,11 +120,42 @@ def _sweep_cache_put(key: tuple, exe) -> None:
     _COMPILED_SWEEPS[key] = exe
 
 
+# Mesh component of every cache key.  A sweep compiled for one device
+# layout must never be served to another: an 8-device shard_mapped program
+# and the single-device program have identical argument shapes, so shapes
+# alone cannot tell them apart.
+_SINGLE_MESH_KEY = ("single", 1)
+
+
+def _cache_entry_info(key: tuple) -> dict:
+    """{kernel, mesh_axis, device_count} view of one cache key (tolerant of
+    synthetic short keys used by unit tests)."""
+    kernel = key[0] if key else "?"
+    mesh = (
+        key[1]
+        if len(key) > 1 and isinstance(key[1], tuple) and len(key[1]) >= 2
+        else _SINGLE_MESH_KEY
+    )
+    return {
+        "kernel": kernel,
+        "mesh_axis": mesh[0],
+        "device_count": int(mesh[1]),
+    }
+
+
 def sweep_cache_stats() -> dict:
-    """Executable-cache accounting: {size, hits, misses, evictions}.
-    ``misses`` counts XLA compilations actually paid — the fleet benchmark
-    asserts a whole multi-model sweep costs exactly one."""
-    return dict(_SWEEP_CACHE_STATS, size=len(_COMPILED_SWEEPS))
+    """Executable-cache accounting: {size, hits, misses, evictions,
+    entries}.  ``misses`` counts XLA compilations actually paid — the fleet
+    benchmark asserts a whole multi-model sweep costs exactly one.
+    ``entries`` lists each cached executable's {kernel, mesh_axis,
+    device_count}, so the device-layout split of the key space is
+    observable (a 1-device sweep and an 8-device sweep are distinct
+    entries even at identical shapes)."""
+    return dict(
+        _SWEEP_CACHE_STATS,
+        size=len(_COMPILED_SWEEPS),
+        entries=[_cache_entry_info(k) for k in _COMPILED_SWEEPS],
+    )
 
 
 def clear_sweep_cache() -> None:
@@ -129,13 +164,18 @@ def clear_sweep_cache() -> None:
         _SWEEP_CACHE_STATS[k] = 0
 
 
-def _compiled_sweep(fn, args) -> tuple[object, float]:
+def _compiled_sweep(
+    fn, args, mesh_key: tuple = _SINGLE_MESH_KEY
+) -> tuple[object, float]:
     """(executable, compile_seconds_this_call) for a jitted metric kernel.
 
     Lowered under scoped ``enable_x64`` with float64 numpy arguments, so
     the sweep is exact (bit-identical to the scalar oracles) without
-    touching the process-global JAX precision config."""
-    key = (getattr(fn, "__name__", str(fn)),) + tuple(
+    touching the process-global JAX precision config.  ``mesh_key``
+    (:data:`_SINGLE_MESH_KEY` or a sharded mesh fingerprint) is part of
+    the cache key: device layout changes the compiled program even at
+    identical argument shapes."""
+    key = (getattr(fn, "__name__", str(fn)), mesh_key) + tuple(
         (a.shape, str(a.dtype)) for a in args
     )
     exe = _sweep_cache_get(key)
@@ -167,6 +207,79 @@ def _metrics_from_row(row: np.ndarray) -> M.Metrics:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class ParetoFront:
+    """Non-dominated (architecture x fusion plan) points of one workload's
+    feasible sweep, minimising (bandwidth, latency, energy, area) jointly —
+    the design-space-exploration output the single min-energy point throws
+    away.  Points are sorted by (energy, bandwidth, latency, area, h, c);
+    exact-duplicate metric rows keep their lowest-index representative
+    (:func:`repro.core.metrics.pareto_front_mask`), so the front is
+    deterministic and device-count invariant like the argmin."""
+
+    metrics: np.ndarray  # (P, 4) [bw, lat, energy, area]
+    hw_indices: np.ndarray  # (P,) into the sweep's config_space
+    cut_indices: np.ndarray  # (P,) into the surviving cut batch
+    configs: tuple[DLAConfig, ...]  # (P,) the actual design points
+    cuts: np.ndarray  # (P, E) the fusion plan of each point
+    n_feasible: int  # candidates the front was extracted from
+    search_engine: str = ""  # grouping provenance, as FlowResult
+
+    @property
+    def size(self) -> int:
+        return int(self.metrics.shape[0])
+
+    def describe(self, limit: int = 8) -> str:
+        lines = [
+            f"pareto front: {self.size} of {self.n_feasible} feasible "
+            f"(groupings={self.search_engine})"
+        ]
+        for i in range(min(self.size, limit)):
+            bw, lat, e, a = self.metrics[i]
+            lines.append(
+                f"  {self.configs[i].describe():40s} "
+                f"BW={bw/1e6:7.2f}M lat={lat/1e6:7.2f}M "
+                f"E={e/1e6:6.2f}mJ A={a/1e6:5.2f}mm^2"
+            )
+        if self.size > limit:
+            lines.append(f"  ... {self.size - limit} more")
+        return "\n".join(lines)
+
+
+def _pareto_front(
+    out: np.ndarray,  # (H, C, 4) real candidate rows
+    feasible: np.ndarray,  # (H, C) bool
+    cuts_batch: np.ndarray,  # (C, E)
+    config_space: Sequence[DLAConfig],
+    search_engine: str,
+) -> ParetoFront:
+    """Extract the feasible sweep's Pareto front in deterministic order."""
+    idx = np.argwhere(feasible)  # (N, 2) in (h, c) lexicographic order
+    rows = out[feasible]  # row-major: matches idx order
+    keep = M.pareto_front_mask(rows)
+    sel_rows, sel_idx = rows[keep], idx[keep]
+    order = np.lexsort(
+        (
+            sel_idx[:, 1],
+            sel_idx[:, 0],
+            sel_rows[:, 3],
+            sel_rows[:, 1],
+            sel_rows[:, 0],
+            sel_rows[:, 2],
+        )
+    )
+    sel_rows, sel_idx = sel_rows[order], sel_idx[order]
+    return ParetoFront(
+        metrics=sel_rows,
+        hw_indices=sel_idx[:, 0],
+        cut_indices=sel_idx[:, 1],
+        configs=tuple(config_space[h] for h in sel_idx[:, 0]),
+        cuts=cuts_batch[sel_idx[:, 1]],
+        n_feasible=int(rows.shape[0]),
+        search_engine=search_engine,
+    )
+
+
 def _best_flow_result(
     out: np.ndarray,  # (H, C, 4) — real candidate rows only, padding sliced
     cuts_batch: np.ndarray,  # (C, E) — real cut rows, real edge columns
@@ -180,17 +293,35 @@ def _best_flow_result(
     candidates_per_second: float,
     search_engine: str = "",
     err_prefix: str = "",
+    pareto: bool = False,
 ) -> FlowResult:
     """Constraint filter + min-energy argmin over one graph's sweep output —
     the single best-point selection shared by run_flow and run_fleet (so
-    feasibility/tie-break semantics can never drift between them)."""
+    feasibility/tie-break semantics can never drift between them).
+
+    Tie-breaking is deterministic: among equal-energy feasible candidates
+    the winner is the lexicographic minimum of (bandwidth, latency, area,
+    h, c).  The selected *metrics* are therefore invariant to any
+    permutation of the hardware axis, and the selected *config* is
+    invariant up to fully-identical metric rows, where the lowest (h, c)
+    index wins — so padding H to a device-count multiple or resharding the
+    sweep can never flip the reported best point (asserted at 1/2/8 host
+    devices in tests/test_multidevice.py).
+    """
     limits = constraints.as_row()  # (4,)
     feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
     n_feas = int(feasible.sum())
     if n_feas == 0:
         raise ValueError(f"{err_prefix}no candidate meets the constraints")
     energy = np.where(feasible, out[:, :, 2], np.inf)
-    h, c = np.unravel_index(np.argmin(energy), energy.shape)
+    ties = np.argwhere(energy == energy.min())  # (h, c) lexicographic order
+    if len(ties) > 1:
+        rows = out[ties[:, 0], ties[:, 1]]  # (k, 4)
+        order = np.lexsort(
+            (ties[:, 1], ties[:, 0], rows[:, 3], rows[:, 1], rows[:, 0])
+        )
+        ties = ties[order[:1]]
+    h, c = ties[0]
     labels = fusion.cut_group_labels(g, cuts_batch[c])
     sizes = tuple(len(grp) for grp in fusion.groups_from_labels(labels))
     return FlowResult(
@@ -205,6 +336,12 @@ def _best_flow_result(
         sweep_seconds=sweep_seconds,
         candidates_per_second=candidates_per_second,
         search_engine=search_engine,
+        pareto=(
+            _pareto_front(out, feasible, cuts_batch, config_space,
+                          search_engine)
+            if pareto
+            else None
+        ),
     )
 
 
@@ -277,6 +414,7 @@ def run_flow(
     groupings: str | np.ndarray = "exhaustive",
     sram_budget_words: float = float("inf"),
     bucket: bool = True,
+    pareto: bool = False,
 ) -> FlowResult:
     """Sweep (hw x grouping), filter by constraints, return min-energy point.
 
@@ -302,6 +440,10 @@ def run_flow(
     ``compile_seconds`` reports the XLA compilation paid by *this* call
     (0 on an executable-cache hit) and ``sweep_seconds`` /
     ``candidates_per_second`` the single timed execution.
+
+    ``pareto=True`` additionally extracts the feasible sweep's
+    (bandwidth, latency, energy, area) Pareto front into
+    ``FlowResult.pareto`` (:class:`ParetoFront`).
     """
     if config_space is None:
         config_space = default_config_space()
@@ -321,7 +463,7 @@ def run_flow(
     C = cuts_batch.shape[0]
 
     hw_rows = np.stack([c.as_row() for c in config_space])
-    area_consts = M.area_consts_of(config_space[0])
+    area_consts = M.area_consts_of_space(config_space)
 
     if bucket:
         pg = pad_graph(
@@ -371,6 +513,7 @@ def run_flow(
         sweep_seconds=sweep_seconds,
         candidates_per_second=n_cand / max(sweep_seconds, 1e-9),
         search_engine=provenance,
+        pareto=pareto,
     )
 
 
@@ -384,13 +527,21 @@ class FleetResult:
     compile_seconds: float  # ONE compile amortised across the whole fleet
     sweep_seconds: float  # the single timed (G, H, C) execution
     candidates_per_second: float
+    # Device layout the sweep ran on: 1 for the single-device program,
+    # else the size of the 1-D `hardware` mesh the H axis was sharded over.
+    device_count: int = 1
 
     def describe(self) -> str:
+        mesh = (
+            f", {self.device_count}-device hardware mesh"
+            if self.device_count > 1
+            else ""
+        )
         lines = [
             f"fleet of {self.n_graphs}: {self.n_candidates} candidates in "
             f"{self.sweep_seconds*1e3:.2f} ms "
             f"({self.candidates_per_second:,.0f} cand/s, one compile "
-            f"{self.compile_seconds*1e3:.0f} ms)"
+            f"{self.compile_seconds*1e3:.0f} ms{mesh})"
         ]
         lines += [f"  {r.describe()}" for r in self.results]
         return "\n".join(lines)
@@ -403,6 +554,8 @@ def run_fleet(
     constraints: Constraints = Constraints(),
     groupings: str | np.ndarray = "search",
     sram_budget_words: float = float("inf"),
+    devices=None,
+    pareto: bool = False,
 ) -> FleetResult:
     """Sweep many graphs' (hw x grouping) cross-products in ONE XLA program.
 
@@ -423,6 +576,27 @@ def run_fleet(
     per-graph ``compile_seconds`` is 0, and per-graph ``sweep_seconds`` /
     ``candidates_per_second`` describe the one shared execution (every
     member reports the fleet-wide throughput, not its own slice of it).
+
+    ``devices`` shards the sweep's hardware axis over a 1-D ``hardware``
+    mesh (:func:`repro.parallel.sharding.hardware_mesh`): ``None`` keeps
+    the single-device program; an int takes the first N visible devices;
+    a device sequence is used as given.  H is padded to a device-count
+    multiple with copies of config 0 — inert rows sliced off before
+    metrics composition, the PR 4 padding idiom on the hardware axis — and
+    each device evaluates its H-shard locally; the (G, H, C, 5) raw plane
+    comes back in one cross-device gather and the per-graph
+    argmin/Pareto run on the host exactly as in the single-device path, so
+    sharded results are **bit-identical** at any device count (asserted at
+    1/2/8 host devices in tests/test_multidevice.py).  The executable
+    cache keys on the mesh fingerprint, so per-layout programs never
+    collide (``sweep_cache_stats()["entries"]``).
+
+    ``pareto=True`` extracts each workload's feasible-sweep Pareto front
+    over (bandwidth, latency, energy, area) into ``results[i].pareto`` —
+    with a :func:`repro.core.arch.config_space_grid` design space this is
+    the LoopTree-style explorer output: thousands of
+    (architecture x fusion plan) points scored per workload, reduced to
+    the non-dominated set.
     """
     if not irs:
         raise ValueError("empty fleet")
@@ -463,7 +637,28 @@ def run_fleet(
     cuts = [pad_cuts_batch(cb, edge_bucket, cut_bucket) for cb in cuts]
 
     hw_rows = np.stack([c.as_row() for c in config_space])
-    area_consts = M.area_consts_of(config_space[0])
+    area_consts = M.area_consts_of_space(config_space)
+    H = hw_rows.shape[0]
+
+    # Device layout: single-device vmapped program, or the same kernel
+    # shard_mapped over a 1-D `hardware` mesh with H padded to a
+    # device-count multiple (padded rows are copies of config 0 — fully
+    # valid arithmetic, sliced off below before metrics composition).
+    mesh_key = _SINGLE_MESH_KEY
+    hw_swept = hw_rows
+    if devices is None:
+        kernel = M._jit_fleet_graph
+    else:
+        mesh = hardware_mesh(devices)
+        kernel = M.sharded_fleet_kernel(mesh)
+        mesh_key = mesh_fingerprint(mesh)
+        D = int(mesh.devices.size)
+        H_padded = -(-H // D) * D
+        if H_padded > H:
+            hw_swept = np.concatenate(
+                [hw_rows, np.repeat(hw_rows[:1], H_padded - H, axis=0)]
+            )
+
     args = (
         np.stack([pg.feat for pg in padded]),
         np.stack([pg.esrc for pg in padded]),
@@ -472,16 +667,17 @@ def run_fleet(
         np.stack([pg.src_mask for pg in padded]),
         np.stack([pg.sink_mask for pg in padded]),
         np.stack(cuts),
-        hw_rows,
+        hw_swept,
         area_consts,
         np.stack([pg.node_mask for pg in padded]),
         np.stack([pg.edge_mask for pg in padded]),
     )
-    exe, compile_seconds = _compiled_sweep(M._jit_fleet_graph, args)
+    exe, compile_seconds = _compiled_sweep(kernel, args, mesh_key=mesh_key)
+    # The sharded path's (G, H_padded, C_b, 5) raw plane arrives here as the
+    # sweep's single cross-device gather; padded hardware rows are sliced
+    # off before energy composition so both paths compose identically.
     raw, sweep_seconds = _run_sweep(exe, args)
-    out = M.compose_metrics(raw, hw_rows)  # (G, H, C_b, 4)
-
-    H = hw_rows.shape[0]
+    out = M.compose_metrics(raw[:, :H], hw_rows)  # (G, H, C_b, 4)
     n_cand = H * sum(counts)
     fleet_cps = n_cand / max(sweep_seconds, 1e-9)
     results = []
@@ -498,6 +694,7 @@ def run_fleet(
                 candidates_per_second=fleet_cps,  # the shared execution rate
                 search_engine=provenances[gi],
                 err_prefix=f"{g.name}: ",
+                pareto=pareto,
             )
         )
     return FleetResult(
@@ -507,6 +704,7 @@ def run_fleet(
         compile_seconds=compile_seconds,
         sweep_seconds=sweep_seconds,
         candidates_per_second=fleet_cps,
+        device_count=1 if devices is None else int(mesh.devices.size),
     )
 
 

@@ -646,6 +646,111 @@ def _evaluate_fleet_graph(
 _jit_fleet_graph = jax.jit(_evaluate_fleet_graph)
 
 
+# Per-mesh jitted shard_map wrappers around the fleet kernel.  Meshes are
+# few (one per device layout the process ever sweeps on), so an unbounded
+# memo is fine; the AOT executable cache in repro.core.flow is what bounds
+# compiled-program memory.
+_SHARDED_FLEET_KERNELS: dict = {}
+
+
+def sharded_fleet_kernel(mesh):
+    """The fleet kernel shard_mapped over ``mesh``'s 1-D hardware axis.
+
+    ``hw_rows`` is sharded ``P(axis)`` along H; every other argument is
+    replicated; the output keeps its (G, H, C, 5) logical shape with the H
+    axis laid out across devices (``P(None, axis)``), so fetching the
+    result is the one cross-device gather of the sweep.  Each device runs
+    :func:`_evaluate_fleet_graph` on its H-shard — per-row arithmetic is
+    identical to the single-device program (rows are vmapped independently;
+    no cross-row reduction exists to reassociate), which is why the sharded
+    sweep is bit-identical, not just close (asserted in
+    tests/test_multidevice.py at 2 and 8 host devices).
+
+    Callers must pad H to a multiple of the device count first
+    (:func:`repro.core.flow.run_fleet` pads with copies of row 0 and slices
+    the padded rows off before metrics composition — the PR 4 inert-padding
+    idiom applied to the hardware axis).
+    """
+    from ..parallel.sharding import HW_AXIS, mesh_fingerprint, shard_map_fn
+
+    key = mesh_fingerprint(mesh)
+    fn = _SHARDED_FLEET_KERNELS.get(key)
+    if fn is None:
+        from jax.sharding import PartitionSpec as P
+
+        repl = P()
+        fn = jax.jit(
+            shard_map_fn()(
+                _evaluate_fleet_graph,
+                mesh=mesh,
+                in_specs=(repl,) * 7 + (P(HW_AXIS), repl, repl, repl),
+                out_specs=P(None, HW_AXIS),
+            )
+        )
+        _SHARDED_FLEET_KERNELS[key] = fn
+    return fn
+
+
+def area_consts_of_space(config_space) -> np.ndarray:
+    """Shared area constants of a config space, validating they ARE shared.
+
+    The sweep kernels take one ``area_consts`` vector for the whole
+    hardware batch (only row fields vary per config), so a space mixing
+    area calibrations would silently evaluate every config under
+    ``config_space[0]``'s constants — reject it instead."""
+    consts = {
+        (
+            c.area_per_mult_um2,
+            c.area_per_pe_overhead_um2,
+            c.area_per_sram_byte_um2,
+            c.area_controller_um2,
+        )
+        for c in config_space
+    }
+    if len(consts) != 1:
+        raise ValueError(
+            f"config space mixes {len(consts)} area-constant calibrations; "
+            "the sweep shares one area_consts vector across the hardware "
+            "batch — sweep each calibration separately"
+        )
+    return area_consts_of(config_space[0])
+
+
+def pareto_front_mask(rows: np.ndarray) -> np.ndarray:
+    """Boolean mask of the Pareto-optimal rows of an (N, M) metric matrix,
+    minimising every column.
+
+    A row is kept iff no other row is <= it in every column and < in at
+    least one.  Exact-duplicate metric rows keep only their FIRST
+    occurrence (lowest index) — the same deterministic lowest-index
+    convention as the flow's argmin tie-break, so the front is invariant
+    to padding and, up to identical metric rows, to permutation of the
+    candidate axes.
+
+    Complexity O(N log N + N * F) where F is the front size (rows are
+    scanned in lexicographic order, in which any dominator of a row
+    precedes it, so each row is tested against the accumulated front
+    only).
+    """
+    rows = np.atleast_2d(np.asarray(rows, dtype=np.float64))
+    n = rows.shape[0]
+    mask = np.zeros(n, dtype=bool)
+    if n == 0:
+        return mask
+    uniq, first_idx = np.unique(rows, axis=0, return_index=True)
+    front = np.empty_like(uniq)
+    k = 0
+    for i, r in enumerate(uniq):
+        # uniq rows are distinct, so componentwise <= already implies
+        # strict dominance somewhere.
+        if k and np.all(front[:k] <= r, axis=1).any():
+            continue
+        front[k] = r
+        k += 1
+        mask[first_idx[i]] = True
+    return mask
+
+
 def evaluate_fleet_graph(
     feat,
     esrc,

@@ -28,6 +28,66 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 DP = ("pod", "data")  # data-parallel axes (whichever exist in the mesh)
 TP = "model"
 
+# Mesh axis name for the evaluator's hardware-config sharding
+# (repro.core.flow.run_fleet(devices=...)): the (G, H, C) sweep's H axis is
+# embarrassingly parallel, so it shards over a 1-D device mesh.
+HW_AXIS = "hardware"
+
+
+def shard_map_fn():
+    """The ``shard_map`` entry point, across jax versions.
+
+    jax >= 0.6 promotes it to ``jax.shard_map``; on 0.4.x it lives in
+    ``jax.experimental.shard_map``.  Same keyword signature
+    ``(f, mesh=..., in_specs=..., out_specs=...)`` either way.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm
+
+
+def hardware_mesh(devices=None, *, axis: str = HW_AXIS) -> Mesh:
+    """A 1-D mesh over ``devices`` for hardware-config sharding.
+
+    ``devices`` may be ``None`` (every visible device), an int (the first N
+    visible devices — errors if fewer exist), or an explicit device
+    sequence.  The axis name defaults to :data:`HW_AXIS`, the name
+    :func:`repro.core.metrics.sharded_fleet_kernel` shards over.
+    """
+    if devices is None:
+        devices = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if devices < 1:
+            raise ValueError(f"need >= 1 device, got {devices}")
+        if devices > len(avail):
+            raise ValueError(
+                f"requested {devices} devices but only {len(avail)} visible "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "for host-platform sharding)"
+            )
+        devices = avail[:devices]
+    devices = np.asarray(devices)
+    if devices.size < 1:
+        raise ValueError("empty device list")
+    return Mesh(devices, (axis,))
+
+
+def mesh_fingerprint(mesh: Mesh) -> tuple:
+    """Hashable identity of a mesh: axis names, size, and device ids.
+
+    This is the cache-key component that keeps executables compiled for one
+    device layout from being served to another (an 8-device program is not
+    a 1-device program even at identical argument shapes)."""
+    return (
+        ",".join(mesh.axis_names),
+        int(mesh.devices.size),
+        tuple(str(d) for d in mesh.devices.flat),
+    )
+
 
 def repair_spec(spec, shape, axis_size) -> "P":
     """Make ``spec`` valid for ``shape``: drop axes a dim cannot host

@@ -2,7 +2,10 @@
 each case spawns a fresh interpreter with xla_force_host_platform_device_count).
 
 Covers: pjit-sharded train step == single-device step; elastic re-mesh
-resume; pipeline parallelism vs sequential; compressed cross-pod psum.
+resume; pipeline parallelism vs sequential; compressed cross-pod psum;
+and the sharded hardware co-search (run_fleet(devices=...) bit-identical
+to the single-device sweep at 2/8 host devices, padded-H masking
+included).
 """
 import subprocess
 import sys
@@ -23,7 +26,11 @@ def run_py(body: str, n_devices: int = 8, timeout: int = 420) -> str:
     res = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
         timeout=timeout, env={"PYTHONPATH": REPO_SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"},
+                              "HOME": "/root",
+                              # without this, libtpu probes GCP instance
+                              # metadata (30 retries per var) before falling
+                              # back to CPU -- minutes of nanosleep
+                              "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert res.returncode == 0, res.stderr[-3000:]
@@ -167,6 +174,74 @@ def test_compressed_train_step_learns_with_s8_wire():
     assert s8 >= 5                        # grads really cross pods as int8
     """)
     assert "s8_allreduces" in out
+
+
+def test_sharded_fleet_bit_identical_vs_single_device():
+    # H=37 is not a multiple of 2 or 8, so both meshes exercise the
+    # padded-H path (inert copies of config 0, sliced before composition).
+    out = run_py("""
+    from repro.core import flow
+    from repro.core.arch import Constraints, config_space_grid
+    from repro.core.ir import residual_block_ir, resnet18_ir
+
+    loose = Constraints(*[float("inf")] * 4)
+    space = config_space_grid(
+        f1s=(2, 4), f2s=(2, 4), f3s=(2, 4), f4s=(2, 4),
+        bus_widths=(2, 4), sram_splits=("unified",),
+    )[:37]
+    irs = [resnet18_ir(), residual_block_ir()]
+    base = flow.run_fleet(irs, config_space=space, constraints=loose,
+                          groupings="pool", pareto=True)
+    for d in (2, 8):
+        fl = flow.run_fleet(irs, config_space=space, constraints=loose,
+                            groupings="pool", devices=d, pareto=True)
+        assert fl.device_count == d
+        assert fl.n_candidates == base.n_candidates  # padded H not counted
+        for a, b in zip(base.results, fl.results):
+            assert a.best_metrics == b.best_metrics, (d, a, b)
+            assert a.best_hw == b.best_hw
+            assert np.array_equal(a.best_cuts, b.best_cuts)
+            assert a.group_sizes == b.group_sizes
+            assert a.n_feasible == b.n_feasible
+            # the whole Pareto front, not just the argmin, is bit-identical
+            assert np.array_equal(a.pareto.metrics, b.pareto.metrics)
+            assert np.array_equal(a.pareto.hw_indices, b.pareto.hw_indices)
+            assert np.array_equal(a.pareto.cut_indices, b.pareto.cut_indices)
+            assert np.array_equal(a.pareto.cuts, b.pareto.cuts)
+        print("devices", d, "ok")
+    layouts = {(e["mesh_axis"], e["device_count"])
+               for e in flow.sweep_cache_stats()["entries"]}
+    assert ("single", 1) in layouts
+    assert ("hardware", 2) in layouts and ("hardware", 8) in layouts
+    print("sharded fleet ok", len(space))
+    """)
+    assert "sharded fleet ok 37" in out
+
+
+def test_sharded_fleet_search_groupings_and_budget_8dev():
+    # The sharded path composes with the rest of the flow: frontier-DP
+    # groupings + SRAM budget prefilter, best metrics == plain run_flow.
+    out = run_py("""
+    from repro.core import flow
+    from repro.core.arch import Constraints, default_config_space
+    from repro.core.ir import residual_block_ir, resnet18_ir
+
+    loose = Constraints(*[float("inf")] * 4)
+    budget = 2.0e6
+    irs = [resnet18_ir(), residual_block_ir()]
+    fl = flow.run_fleet(irs, config_space=default_config_space(),
+                        constraints=loose, groupings="search",
+                        sram_budget_words=budget, devices=8)
+    for g, r in zip(irs, fl.results):
+        solo = flow.run_flow(g, config_space=default_config_space(),
+                             constraints=loose, groupings="search",
+                             sram_budget_words=budget)
+        assert r.best_metrics == solo.best_metrics
+        assert np.array_equal(r.best_cuts, solo.best_cuts)
+        assert r.search_engine == solo.search_engine
+    print("sharded search ok", fl.device_count)
+    """)
+    assert "sharded search ok 8" in out
 
 
 def test_compressed_psum_accuracy_and_wire_dtype():
