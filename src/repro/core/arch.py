@@ -28,6 +28,8 @@ from typing import Sequence
 
 import numpy as np
 
+from .errors import ConfigValidationError
+
 # ---------------------------------------------------------------------------
 # DLA configurations (the paper's ASIC models)
 # ---------------------------------------------------------------------------
@@ -69,14 +71,14 @@ class DLAConfig:
 
     def __post_init__(self):
         if self.style not in ARCH_STYLES:
-            raise ValueError(f"unknown style {self.style!r}")
+            raise ConfigValidationError(f"unknown style {self.style!r}")
         if self.style == "vwa" and self.f3 != 3:
-            raise ValueError("VWA PE blocks are F2 x 3 (f3 must be 3)")
+            raise ConfigValidationError("VWA PE blocks are F2 x 3 (f3 must be 3)")
         if self.pe_energy not in ("pe_cycle", "block_cycle"):
-            raise ValueError(f"unknown pe_energy {self.pe_energy!r}")
+            raise ConfigValidationError(f"unknown pe_energy {self.pe_energy!r}")
         for f in (self.f1, self.f2, self.f3, self.f4):
             if f < 1:
-                raise ValueError("PE factors must be >= 1")
+                raise ConfigValidationError("PE factors must be >= 1")
         object.__setattr__(self, "mults_per_pe", 9 if self.style == "hsiao" else 1)
 
     # ---- compute geometry ---------------------------------------------------
@@ -229,6 +231,10 @@ def config_space_grid(
     for style in styles:
         s_f3s = (3,) if style == "vwa" else f3s
         for split in sram_splits:
+            if split not in SRAM_SPLITS:
+                raise ConfigValidationError(
+                    f"unknown SRAM-split preset {split!r}; "
+                    f"valid presets: {sorted(SRAM_SPLITS)}")
             e_sram = SRAM_SPLITS[split]
             for bus in bus_widths:
                 for f1, f2, f3, f4 in itertools.product(f1s, f2s, s_f3s, f4s):

@@ -1,0 +1,106 @@
+"""Typed error taxonomy for the evaluator and the planning service.
+
+The evaluator started life as a research script: malformed graphs surfaced
+as ``KeyError`` deep inside the tracing frontend, infeasible SRAM budgets
+as bare ``ValueError`` strings, and a declined exact search as a silent
+fallback.  A planning service admitting millions of (graph, hardware,
+budget) queries needs a contract instead: every boundary — IR
+construction, tracing, config resolution, the sweep, the grouping search,
+service admission — raises exactly one of the classes below, and the
+service (:mod:`repro.core.service`) converts them into typed *responses*
+so callers always get a valid plan or a typed rejection, never a raw
+exception or a silently wrong answer.
+
+Compatibility: each concrete class also inherits the builtin exception the
+pre-taxonomy code raised at that boundary (``ValueError`` for validation
+and search failures, ``TimeoutError`` for deadlines), so existing
+``except ValueError`` call sites and tests keep working while new code can
+catch :class:`EvaluatorError` (or a specific subclass) precisely.
+
+Taxonomy::
+
+    EvaluatorError                      # root — nothing else escapes
+    +-- GraphValidationError            # malformed GraphIR / LayerSpec / EdgeSpec
+    +-- UnsupportedOpError              # frontend cannot lower a jaxpr construct
+    +-- ConfigValidationError           # bad DLAConfig / config-space request
+    +-- InfeasibleBudgetError           # SRAM budget rejects every candidate
+    |     .min_feasible_budget_words    #   smallest budget that would admit one
+    +-- InfeasibleConstraintsError      # no swept candidate meets Constraints
+    +-- SearchDeclined                  # a search engine refused the instance
+    |     +-- fusion.FrontierTooWide    #   (defined next to the DP it guards)
+    +-- DeadlineExceeded                # request missed its wall-clock deadline
+    +-- ServiceOverloaded               # queue-depth bound shed the request
+    +-- TransientFailure                # retries exhausted on a transient fault
+"""
+from __future__ import annotations
+
+
+class EvaluatorError(Exception):
+    """Root of every typed failure the evaluator or service can report."""
+
+
+class GraphValidationError(EvaluatorError, ValueError):
+    """A graph/layer/edge violates the IR invariants (non-positive or
+    non-finite dims, edge endpoints out of range, a non-topological edge —
+    i.e. a cycle — or a duplicate edge).  The message names the offending
+    node or edge."""
+
+
+class UnsupportedOpError(EvaluatorError, ValueError):
+    """The tracing frontend cannot lower a jaxpr construct onto the paper's
+    layer abstraction (unknown primitive shape, non-SAME padding, dilated
+    or anisotropic convolutions, batch size != 1, ...)."""
+
+
+class ConfigValidationError(EvaluatorError, ValueError):
+    """A hardware configuration or config-space request is malformed
+    (unknown style / SRAM-split preset, non-positive PE factors, a config
+    space with heterogeneous area constants)."""
+
+
+class InfeasibleBudgetError(EvaluatorError, ValueError):
+    """The SRAM budget rejects every offered grouping candidate.
+
+    ``min_feasible_budget_words`` is the smallest budget under which at
+    least one of the rejected candidates would have survived (NaN when the
+    failing path cannot compute it cheaply) — the actionable number a
+    caller needs to retry, instead of a silently empty candidate set.
+    """
+
+    def __init__(self, message: str,
+                 min_feasible_budget_words: float = float("nan")):
+        super().__init__(message)
+        self.min_feasible_budget_words = float(min_feasible_budget_words)
+
+
+class InfeasibleConstraintsError(EvaluatorError, ValueError):
+    """The sweep ran, but no (hardware x grouping) candidate meets the
+    user constraints."""
+
+
+class SearchDeclined(EvaluatorError, ValueError):
+    """A search engine refused the instance (e.g. the exact frontier DP's
+    width/state caps tripped).  Dispatchers absorb this and fall back; it
+    only escapes when the caller pinned a specific engine."""
+
+
+class DeadlineExceeded(EvaluatorError, TimeoutError):
+    """The request's wall-clock deadline expired before a plan (even the
+    cheapest ladder rung) could be produced."""
+
+
+class ServiceOverloaded(EvaluatorError):
+    """The service's queue-depth bound shed this request instead of
+    growing the queue unboundedly."""
+
+
+class TransientFailure(EvaluatorError):
+    """A transient fault (compile error, cache-eviction race) persisted
+    through the bounded retry-with-backoff.  ``cause`` keeps the last
+    underlying exception; ``attempts`` how many tries were made."""
+
+    def __init__(self, message: str, *, cause: BaseException | None = None,
+                 attempts: int = 0):
+        super().__init__(message)
+        self.cause = cause
+        self.attempts = int(attempts)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Sequence
 
@@ -32,6 +33,7 @@ from . import fusion
 from . import metrics as M
 from ..parallel.sharding import hardware_mesh, mesh_fingerprint
 from .arch import Constraints, DLAConfig, default_config_space
+from .errors import InfeasibleBudgetError, InfeasibleConstraintsError
 from .ir import (
     GraphIR,
     NetworkIR,
@@ -100,24 +102,31 @@ _COMPILED_SWEEPS: "collections.OrderedDict[tuple, object]" = (
 )
 SWEEP_CACHE_CAPACITY = 64
 _SWEEP_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+# One lock covers the OrderedDict *and* its stats dict: the planning
+# service's admission path touches the cache from whatever thread submits,
+# and an unguarded move_to_end/popitem pair can corrupt the LRU order (or
+# the hit/miss/eviction accounting) under interleaving.
+_SWEEP_CACHE_LOCK = threading.Lock()
 
 
 def _sweep_cache_get(key: tuple):
     """LRU lookup: a hit moves the entry to the most-recently-used end."""
-    exe = _COMPILED_SWEEPS.get(key)
-    if exe is not None:
-        _COMPILED_SWEEPS.move_to_end(key)
-        _SWEEP_CACHE_STATS["hits"] += 1
-    return exe
+    with _SWEEP_CACHE_LOCK:
+        exe = _COMPILED_SWEEPS.get(key)
+        if exe is not None:
+            _COMPILED_SWEEPS.move_to_end(key)
+            _SWEEP_CACHE_STATS["hits"] += 1
+        return exe
 
 
 def _sweep_cache_put(key: tuple, exe) -> None:
     """LRU insert: evicts oldest entries only, one at a time, at capacity."""
-    _SWEEP_CACHE_STATS["misses"] += 1
-    while len(_COMPILED_SWEEPS) >= SWEEP_CACHE_CAPACITY:
-        _COMPILED_SWEEPS.popitem(last=False)
-        _SWEEP_CACHE_STATS["evictions"] += 1
-    _COMPILED_SWEEPS[key] = exe
+    with _SWEEP_CACHE_LOCK:
+        _SWEEP_CACHE_STATS["misses"] += 1
+        while len(_COMPILED_SWEEPS) >= SWEEP_CACHE_CAPACITY:
+            _COMPILED_SWEEPS.popitem(last=False)
+            _SWEEP_CACHE_STATS["evictions"] += 1
+        _COMPILED_SWEEPS[key] = exe
 
 
 # Mesh component of every cache key.  A sweep compiled for one device
@@ -150,18 +159,21 @@ def sweep_cache_stats() -> dict:
     ``entries`` lists each cached executable's {kernel, mesh_axis,
     device_count}, so the device-layout split of the key space is
     observable (a 1-device sweep and an 8-device sweep are distinct
-    entries even at identical shapes)."""
-    return dict(
-        _SWEEP_CACHE_STATS,
-        size=len(_COMPILED_SWEEPS),
-        entries=[_cache_entry_info(k) for k in _COMPILED_SWEEPS],
-    )
+    entries even at identical shapes).  Snapshotted under the cache lock,
+    so concurrent readers never see a half-updated accounting."""
+    with _SWEEP_CACHE_LOCK:
+        return dict(
+            _SWEEP_CACHE_STATS,
+            size=len(_COMPILED_SWEEPS),
+            entries=[_cache_entry_info(k) for k in _COMPILED_SWEEPS],
+        )
 
 
 def clear_sweep_cache() -> None:
-    _COMPILED_SWEEPS.clear()
-    for k in _SWEEP_CACHE_STATS:
-        _SWEEP_CACHE_STATS[k] = 0
+    with _SWEEP_CACHE_LOCK:
+        _COMPILED_SWEEPS.clear()
+        for k in _SWEEP_CACHE_STATS:
+            _SWEEP_CACHE_STATS[k] = 0
 
 
 def _compiled_sweep(
@@ -312,7 +324,9 @@ def _best_flow_result(
     feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
     n_feas = int(feasible.sum())
     if n_feas == 0:
-        raise ValueError(f"{err_prefix}no candidate meets the constraints")
+        raise InfeasibleConstraintsError(
+            f"{err_prefix}no candidate meets the constraints"
+        )
     energy = np.where(feasible, out[:, :, 2], np.inf)
     ties = np.argwhere(energy == energy.min())  # (h, c) lexicographic order
     if len(ties) > 1:
@@ -455,10 +469,18 @@ def run_flow(
 
     n_pruned = 0
     if np.isfinite(sram_budget_words):
-        keep = fusion.graph_feasible_mask_batch(g, cuts_batch, sram_budget_words)
+        max_int = fusion.graph_max_intermediate_batch(g, cuts_batch)
+        keep = max_int <= sram_budget_words
         n_pruned = int(cuts_batch.shape[0] - keep.sum())
         if not keep.any():
-            raise ValueError("no grouping fits the SRAM budget")
+            # Never return a silently-empty sweep: report the smallest
+            # budget under which at least one offered grouping survives.
+            raise InfeasibleBudgetError(
+                f"{g.name}: no grouping fits the SRAM budget "
+                f"({sram_budget_words:.0f} words; the cheapest offered "
+                f"grouping needs {max_int.min():.0f})",
+                min_feasible_budget_words=float(max_int.min()),
+            )
         cuts_batch = cuts_batch[keep]
     C = cuts_batch.shape[0]
 
@@ -552,7 +574,7 @@ def run_fleet(
     *,
     config_space: Sequence[DLAConfig] | None = None,
     constraints: Constraints = Constraints(),
-    groupings: str | np.ndarray = "search",
+    groupings: str | np.ndarray | Sequence[np.ndarray] = "search",
     sram_budget_words: float = float("inf"),
     devices=None,
     pareto: bool = False,
@@ -569,7 +591,11 @@ def run_fleet(
     inert and sliced off before feasibility/argmin; asserted in tests).
 
     ``groupings`` / ``sram_budget_words`` / ``constraints`` apply to every
-    graph; the SRAM prefilter runs per graph on the padded cut rows
+    graph — except that ``groupings`` may also be a *sequence* of explicit
+    per-graph cut batches (one (C_i, E_i) bool array per input graph), the
+    form the planning service uses to sweep a micro-batch of requests
+    whose deadline ladders resolved to different engines.  The SRAM
+    prefilter runs per graph on the padded cut rows
     (:func:`repro.core.fusion.padded_feasible_mask_batch`).  Returns a
     :class:`FleetResult` whose ``results[i]`` is graph ``i``'s
     :class:`FlowResult`; the shared compile is reported fleet-level, so
@@ -604,6 +630,19 @@ def run_fleet(
         config_space = default_config_space()
     graphs = [as_graph(ir) for ir in irs]
 
+    # ``groupings`` may be one spec shared by the whole fleet, or a
+    # per-graph sequence of explicit (C_i, E_i) cut batches (the planning
+    # service resolves each request's grouping through its deadline ladder
+    # and sweeps the mixed batch as one fleet program).
+    if isinstance(groupings, (list, tuple)):
+        if len(groupings) != len(graphs):
+            raise ValueError(
+                f"{len(groupings)} grouping specs for {len(graphs)} graphs"
+            )
+        specs = list(groupings)
+    else:
+        specs = [groupings] * len(graphs)
+
     # Per-graph grouping resolution + SRAM prefilter (padded-E cut rows).
     edge_bucket = bucket_size(
         max(g.n_edges for g in graphs), EDGE_BUCKET_FLOOR
@@ -616,19 +655,25 @@ def run_fleet(
     cuts: list[np.ndarray] = []
     pruned: list[int] = []
     provenances: list[str] = []
-    for g, pg in zip(graphs, padded):
+    for g, pg, spec in zip(graphs, padded, specs):
         cb, provenance = groupings_batch(
-            g, groupings, sram_budget_words=sram_budget_words,
+            g, spec, sram_budget_words=sram_budget_words,
             with_provenance=True,
         )
         cb = pad_cuts_batch(cb, edge_bucket)
         provenances.append(provenance)
         n_pruned = 0
         if np.isfinite(sram_budget_words):
-            keep = fusion.padded_feasible_mask_batch(pg, cb, sram_budget_words)
+            max_int = fusion.padded_max_intermediate_batch(pg, cb)
+            keep = max_int <= sram_budget_words
             n_pruned = int(cb.shape[0] - keep.sum())
             if not keep.any():
-                raise ValueError(f"{g.name}: no grouping fits the SRAM budget")
+                raise InfeasibleBudgetError(
+                    f"{g.name}: no grouping fits the SRAM budget "
+                    f"({sram_budget_words:.0f} words; the cheapest offered "
+                    f"grouping needs {max_int.min():.0f})",
+                    min_feasible_budget_words=float(max_int.min()),
+                )
             cb = cb[keep]
         cuts.append(cb)
         pruned.append(n_pruned)

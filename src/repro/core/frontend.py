@@ -58,6 +58,7 @@ import jax
 import numpy as np
 from jax.extend import core as jex_core
 
+from .errors import GraphValidationError, UnsupportedOpError
 from .ir import (
     RESNET18_STAGE_PLAN,
     VGG16_CONV_PLAN,
@@ -141,7 +142,7 @@ class _Tracer:
     def _check_geometry(self, spec: LayerSpec, out_shape, *, what: str) -> None:
         c, h, w = _chw(tuple(out_shape))
         if (spec.n_out, spec.h_out, spec.w_out) != (c, h, w):
-            raise ValueError(
+            raise UnsupportedOpError(
                 f"{self.name}: traced {what} {spec.name} derives "
                 f"{spec.n_out}x{spec.h_out}x{spec.w_out} but the jaxpr "
                 f"produces {c}x{h}x{w} — only SAME-padding geometry "
@@ -152,7 +153,7 @@ class _Tracer:
     def eqn_conv(self, eqn, act_in) -> None:
         lhs, rhs = eqn.invars[0], eqn.invars[1]
         if rhs in self.producer:
-            raise ValueError(
+            raise UnsupportedOpError(
                 f"{self.name}: conv with an activation kernel operand is "
                 "not supported (use dot_general for activation products)"
             )
@@ -162,10 +163,10 @@ class _Tracer:
         if p["lhs_dilation"] != (1,) * len(p["lhs_dilation"]) or p[
             "rhs_dilation"
         ] != (1,) * len(p["rhs_dilation"]):
-            raise ValueError(f"{self.name}: dilated convolutions unsupported")
+            raise UnsupportedOpError(f"{self.name}: dilated convolutions unsupported")
         lshape, rshape = lhs.aval.shape, rhs.aval.shape
         if lshape[dn.lhs_spec[0]] != 1:
-            raise ValueError(f"{self.name}: trace with batch size 1")
+            raise UnsupportedOpError(f"{self.name}: trace with batch size 1")
         n_in = int(lshape[dn.lhs_spec[1]])
         spatial = [int(lshape[i]) for i in dn.lhs_spec[2:]]
         h_in, w_in = (spatial + [1])[:2]
@@ -174,7 +175,7 @@ class _Tracer:
         kh, kw = (ks + [1])[:2]
         strides = tuple(int(s) for s in p["window_strides"])
         if len(set(strides)) != 1:
-            raise ValueError(f"{self.name}: anisotropic conv strides unsupported")
+            raise UnsupportedOpError(f"{self.name}: anisotropic conv strides unsupported")
         groups = int(p["feature_group_count"])
         spec = LayerSpec(
             f"conv{len(self.nodes)}", "conv", n_in, n_out, h_in, w_in,
@@ -184,7 +185,7 @@ class _Tracer:
         out_spatial = [int(out.aval.shape[i]) for i in dn.out_spec[2:]]
         oh, ow = (out_spatial + [1])[:2]
         if (spec.h_out, spec.w_out) != (oh, ow):
-            raise ValueError(
+            raise UnsupportedOpError(
                 f"{self.name}: conv {spec.name} derives {spec.h_out}x{spec.w_out} "
                 f"but the jaxpr produces {oh}x{ow} — only SAME-padding geometry "
                 "(out = in // stride) is representable"
@@ -196,7 +197,7 @@ class _Tracer:
         (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
         lshape, rshape = lhs.aval.shape, rhs.aval.shape
         if any(lshape[d] != 1 for d in lb) or any(rshape[d] != 1 for d in rb):
-            raise ValueError(f"{self.name}: trace dot_general with batch size 1")
+            raise UnsupportedOpError(f"{self.name}: trace dot_general with batch size 1")
         k = int(math.prod(lshape[d] for d in lc))
         l_free = int(math.prod(lshape[d] for d in range(len(lshape)) if d not in lc))
         r_free = int(math.prod(rshape[d] for d in range(len(rshape)) if d not in rc))
@@ -217,7 +218,7 @@ class _Tracer:
         )
         out = eqn.outvars[0]
         if _words(out.aval) != m * n:
-            raise ValueError(
+            raise UnsupportedOpError(
                 f"{self.name}: dot_general output has {_words(out.aval)} words, "
                 f"expected {m}*{n}"
             )
@@ -229,16 +230,16 @@ class _Tracer:
         window = tuple(int(d) for d in eqn.params["window_dimensions"])
         strides = tuple(int(s) for s in eqn.params["window_strides"])
         if len(shape) != 4 or window[0] != 1 or window[3] != 1:
-            raise ValueError(
+            raise UnsupportedOpError(
                 f"{self.name}: reduce_window expects NHWC with a spatial "
                 f"window, got shape {shape} window {window}"
             )
         if shape[0] != 1:
-            raise ValueError(f"{self.name}: trace with batch size 1")
+            raise UnsupportedOpError(f"{self.name}: trace with batch size 1")
         kh, kw = window[1], window[2]
         sh, sw = strides[1], strides[2]
         if sh != sw:
-            raise ValueError(f"{self.name}: anisotropic pool strides unsupported")
+            raise UnsupportedOpError(f"{self.name}: anisotropic pool strides unsupported")
         c, h_in, w_in = int(shape[3]), int(shape[1]), int(shape[2])
         out = eqn.outvars[0]
         if (
@@ -272,7 +273,7 @@ class _Tracer:
         if len(shape) != 4 or axes != (1, 2) or shape[1] != shape[2]:
             return False
         if shape[0] != 1:
-            raise ValueError(f"{self.name}: trace with batch size 1")
+            raise UnsupportedOpError(f"{self.name}: trace with batch size 1")
         c, hw = int(shape[3]), int(shape[1])
         spec = LayerSpec(
             f"pool{len(self.nodes)}", "pool", c, c, hw, hw, hw, hw, hw
@@ -334,7 +335,7 @@ class _Tracer:
                 if not self.eqn_spatial_reduce(eqn, act_in):
                     # Folding a reduction would emit a producer frame that
                     # disagrees with its consumer edge words — refuse.
-                    raise ValueError(
+                    raise UnsupportedOpError(
                         f"{self.name}: {prim} over axes "
                         f"{tuple(eqn.params['axes'])} on shape "
                         f"{eqn.invars[0].aval.shape} is not representable "
@@ -344,7 +345,7 @@ class _Tracer:
             else:
                 self.eqn_default(eqn, act_in)
         if not self.nodes:
-            raise ValueError(f"{self.name}: no layers traced")
+            raise UnsupportedOpError(f"{self.name}: no layers traced")
         edges = tuple(
             EdgeSpec(src, dst, words)
             for dst, node in enumerate(self.nodes)
@@ -372,13 +373,24 @@ def trace(
     optionally renames the nodes (length-checked).
     """
     if not args:
-        raise ValueError("trace() needs at least one example argument")
+        raise UnsupportedOpError("trace() needs at least one example argument")
     nums = (
         {len(args) - 1}
         if activation_argnums is None
         else {a % len(args) for a in activation_argnums}
     )
-    closed = jax.make_jaxpr(fn)(*args)
+    try:
+        closed = jax.make_jaxpr(fn)(*args)
+    except (UnsupportedOpError, GraphValidationError):
+        raise
+    except Exception as e:
+        # jax itself rejected the function (rank/shape errors surface as
+        # raw ValueError/IndexError/TypeError while *building* the jaxpr)
+        # — the trace boundary converts them to the typed taxonomy.
+        raise UnsupportedOpError(
+            f"{name}: fn is not traceable to a jaxpr "
+            f"({type(e).__name__}: {e})"
+        ) from e
     tr = _Tracer(name=name, fold_pool=fold_pool)
     invars = iter(closed.jaxpr.invars)
     for i, arg in enumerate(args):
@@ -387,7 +399,21 @@ def trace(
             v = next(invars)
             if i in nums:
                 tr.producer[v] = v  # each input var is its own source
-    g = tr.run(closed.jaxpr)
+    # Lowering must fail *typed*: an unlowerable jaxpr is an
+    # UnsupportedOpError and a lowered-but-invalid IR a
+    # GraphValidationError — never a raw KeyError/IndexError from a
+    # degenerate primitive the lowering rules did not anticipate (the
+    # contract the service admission path and the fuzz tests rely on).
+    try:
+        g = tr.run(closed.jaxpr)
+    except (GraphValidationError, UnsupportedOpError):
+        raise
+    except (KeyError, IndexError, AttributeError, TypeError,
+            ZeroDivisionError, AssertionError) as e:
+        raise UnsupportedOpError(
+            f"{name}: jaxpr is not lowerable to the layer abstraction "
+            f"({type(e).__name__}: {e})"
+        ) from e
     if names is not None:
         g = rename_nodes(g, names)
     return g
@@ -395,7 +421,7 @@ def trace(
 
 def rename_nodes(g: GraphIR, names: Sequence[str]) -> GraphIR:
     if len(names) != len(g.nodes):
-        raise ValueError(
+        raise UnsupportedOpError(
             f"{g.name}: {len(names)} names for {len(g.nodes)} nodes "
             f"(traced: {[n.name for n in g.nodes]})"
         )
@@ -408,7 +434,7 @@ def rename_nodes(g: GraphIR, names: Sequence[str]) -> GraphIR:
 def to_chain(g: GraphIR, name: str | None = None) -> NetworkIR:
     """Collapse a chain-shaped trace back to the legacy :class:`NetworkIR`."""
     if not g.is_chain:
-        raise ValueError(f"{g.name} is not a chain ({g.n_edges} edges)")
+        raise UnsupportedOpError(f"{g.name} is not a chain ({g.n_edges} edges)")
     return NetworkIR(name or g.name, g.nodes)
 
 
@@ -431,7 +457,7 @@ def vgg16_network(
     from ..models import vgg
 
     if pool_mode not in ("separate", "absorbed"):
-        raise ValueError(pool_mode)
+        raise UnsupportedOpError(pool_mode)
     g = trace(
         vgg.forward,
         vgg.param_specs(),

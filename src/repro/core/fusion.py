@@ -83,6 +83,7 @@ from .ir import (
     _min_label_reps_batch,
 )
 from . import metrics as M
+from .errors import InfeasibleBudgetError, SearchDeclined
 
 MAX_EXHAUSTIVE_LAYERS = 21  # 2^20 cut vectors ~ 1M candidates (vectorised)
 # DAG enumeration is a chunked masked array pipeline (batch labelling + Kahn
@@ -106,10 +107,13 @@ FRONTIER_DP_MAX_WIDTH = 12
 FRONTIER_DP_MAX_STATES = 1 << 17
 
 
-class FrontierTooWide(ValueError):
+class FrontierTooWide(SearchDeclined):
     """Raised by :func:`frontier_dp_min_bw` when the frontier width or the
     live state count exceeds its caps; :func:`optimal_cuts` absorbs it and
-    falls back to exhaustive enumeration (small graphs) or beam search."""
+    falls back to exhaustive enumeration (small graphs) or beam search.
+    A :class:`repro.core.errors.SearchDeclined`, so service callers that
+    pin the exact engine get the typed decline instead of a bare
+    ``ValueError``."""
 
 
 def enumerate_cuts(n_layers: int) -> np.ndarray:
@@ -461,7 +465,9 @@ def optimal_cuts_dp(
                 dp[j] = cost
                 back[j] = i
     if not np.isfinite(dp[L]):
-        raise ValueError("no feasible grouping under the SRAM budget")
+        raise InfeasibleBudgetError(
+            "no feasible grouping under the SRAM budget"
+        )
     # Reconstruct groups.
     bounds = []
     j = L
@@ -538,7 +544,10 @@ def brute_force_min_bw(
     costs = np.where(feas, costs_all, np.inf)
     j = int(np.argmin(costs))  # first min == the scalar loop's strict-< scan
     if not np.isfinite(costs[j]):
-        raise ValueError("no feasible grouping under the SRAM budget")
+        raise InfeasibleBudgetError(
+            "no feasible grouping under the SRAM budget",
+            min_feasible_budget_words=float(max_int.min()),
+        )
     best_cuts = cuts_all[j].copy()
     n_groups = int(cut_group_labels(g, best_cuts).max()) + 1
     return DPResult(
@@ -569,7 +578,9 @@ def _brute_force_min_bw_scalar(
             best_cost, best_cuts = cost, cuts
             best_groups = int(labels.max()) + 1
     if best_cuts is None:
-        raise ValueError("no feasible grouping under the SRAM budget")
+        raise InfeasibleBudgetError(
+            "no feasible grouping under the SRAM budget"
+        )
     return DPResult(cuts=best_cuts, group_cost_words=best_cost,
                     n_groups=best_groups, engine="exhaustive_scalar")
 
@@ -834,7 +845,9 @@ def frontier_dp_min_bw(
                         acc_new, cuts_new,
                     )
         if not new_states:
-            raise ValueError("no feasible grouping under the SRAM budget")
+            raise InfeasibleBudgetError(
+            "no feasible grouping under the SRAM budget"
+        )
         if len(new_states) > max_states:
             raise FrontierTooWide(
                 f"{len(new_states)} live states exceed the DP cap {max_states}"

@@ -45,11 +45,58 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from .errors import GraphValidationError
+
 # Layer kinds.  "conv" and "fc" carry weights; "pool" is weightless; "matmul"
 # covers transformer projections (weights) and "actmul" covers activation x
 # activation products (attention QK^T / PV) whose "weights" are activations
 # and therefore count as input traffic, not weight traffic.
 KINDS = ("conv", "pool", "fc", "matmul", "actmul", "elementwise")
+
+# Integer-valued LayerSpec fields and the floor each must satisfy.  NaN,
+# inf, floats and negative word counts are all rejected here — the
+# feature-matrix columns derive from these fields, so validating them at
+# construction is what makes every downstream feature word finite and
+# non-negative (the service's admission contract).
+_LAYER_INT_FIELDS = (
+    ("n_in", 1), ("n_out", 1), ("h_in", 1), ("w_in", 1),
+    ("kh", 1), ("kw", 1), ("stride", 1), ("pool_after", 1),
+    ("flops_per_mac", 1), ("groups", 1), ("ext_in_words", 0),
+)
+
+
+def _as_valid_int(value, *, floor: int, what: str) -> int:
+    """``value`` as a plain int, or :class:`GraphValidationError` naming the
+    offending field — floats (including NaN/inf), bools and anything below
+    ``floor`` are corrupt feature words, not layer geometry."""
+    if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+        raise GraphValidationError(
+            f"{what} = {value!r} is not an integer word count"
+        )
+    if value < floor:
+        raise GraphValidationError(f"{what} = {int(value)} is below {floor}")
+    return int(value)
+
+
+def validate_layer(l: "LayerSpec") -> None:
+    """Check every :class:`LayerSpec` invariant, raising
+    :class:`GraphValidationError` naming the offending field.  Runs at
+    construction (``__post_init__``) and again from
+    :meth:`GraphIR.validate` so graphs corrupted *after* construction
+    (deserialisation, test fault injection) are still caught at the
+    service boundary."""
+    if l.kind not in KINDS:
+        raise GraphValidationError(
+            f"{l.name}: unknown layer kind {l.kind!r} (expected one of {KINDS})"
+        )
+    for field, floor in _LAYER_INT_FIELDS:
+        _as_valid_int(getattr(l, field), floor=floor,
+                      what=f"{l.name}: {field}")
+    if l.n_in % l.groups or l.n_out % l.groups:
+        raise GraphValidationError(
+            f"{l.name}: groups={l.groups} must divide "
+            f"n_in={l.n_in} and n_out={l.n_out}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,17 +131,7 @@ class LayerSpec:
     ext_in_words: int = 0
 
     def __post_init__(self):
-        if self.kind not in KINDS:
-            raise ValueError(f"unknown layer kind {self.kind!r}")
-        if min(self.n_in, self.n_out, self.h_in, self.w_in) <= 0:
-            raise ValueError(f"non-positive dims in {self.name}")
-        if self.groups < 1 or self.n_in % self.groups or self.n_out % self.groups:
-            raise ValueError(
-                f"{self.name}: groups={self.groups} must divide "
-                f"n_in={self.n_in} and n_out={self.n_out}"
-            )
-        if self.ext_in_words < 0:
-            raise ValueError(f"{self.name}: ext_in_words < 0")
+        validate_layer(self)
 
     # ---- derived geometry (SAME padding; stride then absorbed pool) --------
     @property
@@ -399,12 +436,25 @@ class EdgeSpec:
     words: int
 
     def __post_init__(self):
-        if self.src < 0 or self.dst <= self.src:
-            raise ValueError(
-                f"edge ({self.src}->{self.dst}) must be topological (src < dst)"
-            )
-        if self.words <= 0:
-            raise ValueError(f"edge ({self.src}->{self.dst}) has words <= 0")
+        validate_edge(self)
+
+
+def validate_edge(e: "EdgeSpec", n_nodes: int | None = None) -> None:
+    """Check one :class:`EdgeSpec`, raising :class:`GraphValidationError`
+    naming the edge.  ``src < dst`` is the IR's acyclicity invariant (node
+    ids are topological); ``n_nodes`` additionally range-checks the
+    endpoints against a graph."""
+    tag = f"edge ({e.src}->{e.dst})"
+    _as_valid_int(e.src, floor=0, what=f"{tag} src")
+    _as_valid_int(e.dst, floor=0, what=f"{tag} dst")
+    if e.dst <= e.src:
+        raise GraphValidationError(
+            f"{tag} must be topological (src < dst); a dst <= src edge "
+            "would make the graph cyclic"
+        )
+    _as_valid_int(e.words, floor=1, what=f"{tag} words")
+    if n_nodes is not None and e.dst >= n_nodes:
+        raise GraphValidationError(f"{tag} out of range (L={n_nodes})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -422,19 +472,43 @@ class GraphIR:
     edges: tuple[EdgeSpec, ...]
 
     def __post_init__(self):
-        if not self.nodes:
-            raise ValueError("empty graph")
-        L = len(self.nodes)
-        seen = set()
-        for e in self.edges:
-            if e.dst >= L:
-                raise ValueError(f"edge ({e.src}->{e.dst}) out of range (L={L})")
-            if (e.src, e.dst) in seen:
-                raise ValueError(f"duplicate edge ({e.src}->{e.dst})")
-            seen.add((e.src, e.dst))
+        self.validate()
         object.__setattr__(
             self, "edges", tuple(sorted(self.edges, key=lambda e: (e.src, e.dst)))
         )
+
+    def validate(self) -> "GraphIR":
+        """Re-check every IR invariant — node fields finite/positive, edge
+        endpoints in range, topological (acyclic) edges, no duplicates —
+        raising :class:`GraphValidationError` naming the offending node or
+        edge.  Runs at construction, and again at the planning-service
+        admission boundary so graphs corrupted after construction
+        (deserialisation bugs, fault injection) are rejected with a typed
+        error instead of surfacing as an index error deep in a kernel.
+        Returns ``self`` so call sites can chain."""
+        if not self.nodes:
+            raise GraphValidationError(f"{self.name}: empty graph")
+        for i, n in enumerate(self.nodes):
+            if not isinstance(n, LayerSpec):
+                raise GraphValidationError(
+                    f"{self.name}: node {i} is {type(n).__name__}, "
+                    "not a LayerSpec"
+                )
+            validate_layer(n)
+        L = len(self.nodes)
+        seen = set()
+        for e in self.edges:
+            if not isinstance(e, EdgeSpec):
+                raise GraphValidationError(
+                    f"{self.name}: edge {e!r} is not an EdgeSpec"
+                )
+            validate_edge(e, L)
+            if (e.src, e.dst) in seen:
+                raise GraphValidationError(
+                    f"duplicate edge ({e.src}->{e.dst})"
+                )
+            seen.add((e.src, e.dst))
+        return self
 
     def __len__(self) -> int:
         return len(self.nodes)

@@ -43,6 +43,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .errors import ConfigValidationError
 from jax.experimental import enable_x64
 
 from .arch import DLAConfig
@@ -708,7 +710,7 @@ def area_consts_of_space(config_space) -> np.ndarray:
         for c in config_space
     }
     if len(consts) != 1:
-        raise ValueError(
+        raise ConfigValidationError(
             f"config space mixes {len(consts)} area-constant calibrations; "
             "the sweep shares one area_consts vector across the hardware "
             "batch — sweep each calibration separately"

@@ -1,0 +1,616 @@
+"""Deadline-aware planning service over the fleet evaluator.
+
+:func:`repro.core.flow.run_fleet` is a batch engine: hand it a list of
+graphs and it sweeps the whole (graph x hardware x grouping) cross-product
+in one XLA program.  This module wraps it as a *service*: callers submit
+``(graph, config space, SRAM budget, deadline)`` requests one at a time and
+always get a typed :class:`PlanResponse` back — a valid plan or a typed
+rejection from :mod:`repro.core.errors`, never a raw exception and never a
+silently wrong answer.
+
+The serving moves, in the order a request meets them:
+
+1. **Admission** (:meth:`PlanningService.submit`): the graph is
+   re-validated (:meth:`repro.core.ir.GraphIR.validate` — corrupt objects
+   that dodged ``__post_init__`` are caught here), the budget/deadline
+   checked for NaN/negative values, and the config space checked for
+   shared area constants.  A full queue sheds the request with
+   :class:`~repro.core.errors.ServiceOverloaded` instead of growing
+   unboundedly.
+2. **Plan cache**: admitted requests first consult a bounded LRU keyed on
+   ``(graph, budget, constraints, config space)`` — :class:`GraphIR` is a
+   frozen, hashable dataclass, so the graph itself is the key.  Only
+   *non-degraded* responses are cached (a degraded plan must not shadow
+   the exact plan a later, slacker deadline could afford).
+3. **Degradation ladder** (:meth:`PlanningService.tick`): each request's
+   grouping search runs at the highest rung its remaining deadline
+   affords, estimated by per-rung EWMAs of observed search cost::
+
+       exact   flow.groupings_batch(g, "search")   certified when the
+                                                   engine is exact
+       beam    fusion.beam_merge_cuts              heuristic, >= greedy
+       greedy  fusion.greedy_merge_cuts            heuristic
+       lbl     fusion.layer_by_layer_cuts          always feasible
+
+   The exact rung resolves through the same ``groupings_batch`` call
+   :func:`~repro.core.flow.run_fleet` uses offline, so a non-degraded
+   service plan is **bit-identical** to the offline answer (asserted in
+   tests/test_service.py).  Every response stamps the engine provenance,
+   ``exact``/``degraded`` flags, and a monotone ``quality_bound``: the
+   rung's achieved group cost over the fully-fused lower bound
+   (cutting an edge only ever adds a DRAM round-trip, so the all-uncut
+   cost is admissible); the ratio is >= 1 and non-decreasing down the
+   ladder.
+4. **Micro-batched sweep**: the tick coalesces resolved requests by
+   ``(budget, constraints, config space)`` and evaluates each group as ONE
+   ``run_fleet`` program with per-graph explicit cut batches — the PR 4/6
+   shape-bucket amortisation applied to the serving path.  A group member
+   whose request is individually infeasible falls back to a singleton
+   sweep so it cannot poison its neighbours.
+5. **Retry with backoff**: non-evaluator exceptions from the sweep
+   (transient compile/cache races, injected faults) are retried up to
+   ``max_retries`` with exponential backoff; exhaustion returns a
+   :class:`~repro.core.errors.TransientFailure` response.  Typed
+   evaluator errors are *not* retried — they are deterministic verdicts.
+
+Fault injection: a duck-typed ``faults`` object (see
+:mod:`repro.testing.faults`) may define ``on_tick(n)``,
+``before_search(request)`` and ``before_sweep(group_size)`` hooks, called
+at the matching points — the same callable-hook idiom as
+:mod:`repro.runtime.fault_tolerance`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import flow, fusion
+from .arch import Constraints, DLAConfig, default_config_space
+from .errors import (
+    ConfigValidationError,
+    DeadlineExceeded,
+    EvaluatorError,
+    GraphValidationError,
+    ServiceOverloaded,
+    TransientFailure,
+)
+from .ir import GraphIR, NetworkIR, as_graph
+
+# Degradation ladder, most expensive / highest quality first.
+RUNGS = ("exact", "beam", "greedy", "lbl")
+
+# Fraction of the remaining deadline a rung's estimated cost may consume;
+# the slack absorbs the sweep + bookkeeping that follow the search.
+_RUNG_SAFETY = 0.8
+
+# EWMA smoothing for per-rung search-cost estimates (higher = faster
+# adaptation to the current workload mix).
+_EWMA_ALPHA = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One planning query: find the min-energy (hardware x fusion plan)
+    point for ``graph`` under ``sram_budget_words``, within
+    ``deadline_seconds`` of submission.  ``config_space``/``constraints``
+    default to the service-wide ones."""
+
+    graph: NetworkIR | GraphIR
+    sram_budget_words: float = float("inf")
+    deadline_seconds: float = float("inf")
+    constraints: Constraints | None = None
+    config_space: tuple[DLAConfig, ...] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResponse:
+    """The service's answer — exactly one of ``plan``/``error`` is set.
+
+    ``engine`` is the grouping-search provenance ("chain_dp",
+    "frontier_dp", "exhaustive", "beam", "greedy", "lbl"); ``exact`` says
+    the grouping is a certified optimum, ``degraded`` that the deadline
+    ladder picked a rung below exact.  ``quality_bound`` is the rung's
+    achieved group cost over the fully-fused admissible lower bound
+    (>= 1.0, monotone non-decreasing down the ladder; NaN on errors).
+    """
+
+    request_id: int
+    ok: bool
+    plan: flow.FlowResult | None = None
+    error: EvaluatorError | None = None
+    engine: str = ""
+    rung: str = ""
+    exact: bool = False
+    degraded: bool = False
+    quality_bound: float = float("nan")
+    from_cache: bool = False
+    latency_seconds: float = 0.0
+
+    @property
+    def error_type(self) -> str:
+        return type(self.error).__name__ if self.error is not None else ""
+
+
+@dataclasses.dataclass
+class _Admitted:
+    """Internal queue entry: a validated request plus submission state."""
+
+    request_id: int
+    g: GraphIR
+    budget: float
+    deadline: float  # absolute clock() value, inf when unconstrained
+    constraints: Constraints
+    config_space: tuple[DLAConfig, ...]
+    submitted_at: float
+    cache_key: tuple
+
+
+@dataclasses.dataclass
+class _Resolved:
+    """A queue entry whose grouping search ran: ready to sweep."""
+
+    adm: _Admitted
+    cuts: np.ndarray  # (C, E) explicit batch for run_fleet
+    engine: str
+    rung: str
+    exact: bool
+    quality_bound: float
+
+
+def _lower_bound_cost(g: GraphIR) -> float:
+    """Fully-fused group cost — admissible: cutting an edge only adds a
+    DRAM round-trip, so no grouping costs less."""
+    return fusion._graph_cost(g, np.zeros(g.n_edges, dtype=bool))
+
+
+class PlanningService:
+    """Deadline-aware, micro-batching front end over ``run_fleet``.
+
+    Synchronous by design: ``submit()`` enqueues (or answers immediately
+    from cache / with a typed rejection) and ``tick()`` drains one
+    micro-batch; ``plan()`` is the one-shot convenience.  All shared
+    state is touched from the caller's thread — the thread-safety story
+    is the executable cache's lock (:mod:`repro.core.flow`), not this
+    class.
+    """
+
+    def __init__(
+        self,
+        *,
+        config_space: Sequence[DLAConfig] | None = None,
+        constraints: Constraints = Constraints(),
+        max_queue_depth: int = 256,
+        max_batch: int = 16,
+        plan_cache_capacity: int = 512,
+        max_retries: int = 3,
+        backoff_seconds: float = 0.05,
+        faults=None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.config_space = tuple(
+            config_space if config_space is not None else default_config_space()
+        )
+        self.constraints = constraints
+        self.max_queue_depth = int(max_queue_depth)
+        self.max_batch = int(max_batch)
+        self.max_retries = int(max_retries)
+        self.backoff_seconds = float(backoff_seconds)
+        self.faults = faults
+        self.clock = clock
+
+        self._queue: collections.deque[_Admitted] = collections.deque()
+        self._responses: dict[int, PlanResponse] = {}
+        self._next_id = 0
+        self._ticks = 0
+
+        self._plan_cache: "collections.OrderedDict[tuple, PlanResponse]" = (
+            collections.OrderedDict()
+        )
+        self.plan_cache_capacity = int(plan_cache_capacity)
+        self._cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+        # Per-rung EWMA of observed grouping-search seconds, and one for
+        # the shared sweep.  Zero-initialised: the first request always
+        # tries the exact rung, and real costs take over from there.
+        self._rung_ewma = {r: 0.0 for r in RUNGS}
+        self._sweep_ewma = 0.0
+
+        self._counters = collections.Counter()
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: PlanRequest) -> int:
+        """Validate and enqueue one request; returns its request id.
+
+        Invalid requests are *answered*, not raised: the typed rejection
+        is recorded immediately and the id returned as usual."""
+        rid = self._next_id
+        self._next_id += 1
+        self._counters["submitted"] += 1
+        t0 = self.clock()
+        try:
+            adm = self._admit(rid, request, t0)
+        except EvaluatorError as e:
+            self._reject(rid, e, t0)
+            return rid
+        except Exception as e:  # malformed request objects, duck-typed junk
+            self._reject(
+                rid,
+                GraphValidationError(
+                    f"malformed request ({type(e).__name__}: {e})"
+                ),
+                t0,
+            )
+            return rid
+
+        cached = self._cache_get(adm.cache_key)
+        if cached is not None:
+            self._responses[rid] = dataclasses.replace(
+                cached,
+                request_id=rid,
+                from_cache=True,
+                latency_seconds=self.clock() - t0,
+            )
+            self._counters["cache_hits"] += 1
+            return rid
+
+        if len(self._queue) >= self.max_queue_depth:
+            self._counters["shed"] += 1
+            self._reject(
+                rid,
+                ServiceOverloaded(
+                    f"queue depth {len(self._queue)} at capacity "
+                    f"{self.max_queue_depth}"
+                ),
+                t0,
+            )
+            return rid
+
+        self._queue.append(adm)
+        return rid
+
+    def _admit(self, rid: int, request: PlanRequest, t0: float) -> _Admitted:
+        """Validate every field of a request; raises typed errors."""
+        if not isinstance(request.graph, (GraphIR, NetworkIR)):
+            raise GraphValidationError(
+                f"request graph must be GraphIR or NetworkIR, "
+                f"got {type(request.graph).__name__}"
+            )
+        g = as_graph(request.graph)
+        g.validate()  # corrupt objects that dodged __post_init__
+
+        budget = float(request.sram_budget_words)
+        if np.isnan(budget) or budget <= 0:
+            raise GraphValidationError(
+                f"sram_budget_words must be positive, got {budget}"
+            )
+
+        deadline_s = float(request.deadline_seconds)
+        if np.isnan(deadline_s) or deadline_s < 0:
+            raise DeadlineExceeded(
+                f"deadline_seconds must be non-negative, got {deadline_s}"
+            )
+
+        constraints = (
+            request.constraints
+            if request.constraints is not None
+            else self.constraints
+        )
+        if request.config_space is not None:
+            space = tuple(request.config_space)
+            if not space or not all(
+                isinstance(c, DLAConfig) for c in space
+            ):
+                raise ConfigValidationError(
+                    "config_space must be a non-empty sequence of DLAConfig"
+                )
+        else:
+            space = self.config_space
+        # area_consts_of_space raises ConfigValidationError on a space
+        # mixing area calibrations — reject at admission, not mid-sweep.
+        from . import metrics as M
+
+        M.area_consts_of_space(space)
+
+        return _Admitted(
+            request_id=rid,
+            g=g,
+            budget=budget,
+            deadline=t0 + deadline_s if np.isfinite(deadline_s) else float("inf"),
+            constraints=constraints,
+            config_space=space,
+            submitted_at=t0,
+            cache_key=(
+                g,
+                budget,
+                constraints.as_row().tobytes(),
+                space,
+            ),
+        )
+
+    def _reject(self, rid: int, err: EvaluatorError, t0: float) -> None:
+        self._counters[f"err:{type(err).__name__}"] += 1
+        self._responses[rid] = PlanResponse(
+            request_id=rid,
+            ok=False,
+            error=err,
+            latency_seconds=self.clock() - t0,
+        )
+
+    # ------------------------------------------------------------------
+    # plan cache (bounded LRU, same idiom as flow._COMPILED_SWEEPS)
+    # ------------------------------------------------------------------
+
+    def _cache_get(self, key: tuple) -> PlanResponse | None:
+        resp = self._plan_cache.get(key)
+        if resp is not None:
+            self._plan_cache.move_to_end(key)
+            self._cache_stats["hits"] += 1
+        else:
+            self._cache_stats["misses"] += 1
+        return resp
+
+    def _cache_put(self, key: tuple, resp: PlanResponse) -> None:
+        while len(self._plan_cache) >= self.plan_cache_capacity:
+            self._plan_cache.popitem(last=False)
+            self._cache_stats["evictions"] += 1
+        self._plan_cache[key] = resp
+
+    def plan_cache_stats(self) -> dict:
+        return dict(self._cache_stats, size=len(self._plan_cache))
+
+    # ------------------------------------------------------------------
+    # degradation ladder
+    # ------------------------------------------------------------------
+
+    def _pick_rung(self, remaining: float) -> str:
+        """Highest rung whose estimated search+sweep cost fits the
+        remaining deadline (with safety margin).  Falls through to "lbl"
+        as the best-effort floor."""
+        if not np.isfinite(remaining):
+            return "exact"
+        allowance = remaining * _RUNG_SAFETY - self._sweep_ewma
+        for rung in RUNGS[:-1]:
+            if self._rung_ewma[rung] <= allowance:
+                return rung
+        return "lbl"
+
+    def _resolve(self, adm: _Admitted) -> _Resolved:
+        """Run the grouping search at the deadline-selected rung.
+
+        Raises :class:`DeadlineExceeded` when the deadline expired before
+        (or during — e.g. a stalled search) the resolution."""
+        now = self.clock()
+        if now > adm.deadline:
+            raise DeadlineExceeded(
+                f"deadline expired {now - adm.deadline:.3f}s before the "
+                "grouping search started"
+            )
+        rung = self._pick_rung(adm.deadline - now)
+
+        if self.faults is not None and hasattr(self.faults, "before_search"):
+            self.faults.before_search(adm)
+
+        g, budget = adm.g, adm.budget
+        t0 = self.clock()
+        lbl = fusion.layer_by_layer_cuts(g)
+        if rung == "exact":
+            # The SAME resolution run_fleet(groupings="search") performs
+            # offline — this is what makes non-degraded service plans
+            # bit-identical to the batch answer.
+            cuts, engine = flow.groupings_batch(
+                g, "search", sram_budget_words=budget, with_provenance=True
+            )
+            # Re-resolving for the achieved cost is near-free: the
+            # frontier DP memoises per (graph, budget), and the chain
+            # DP / exhaustive paths are tiny at service graph sizes.
+            best = fusion.optimal_cuts(g, sram_budget_words=budget)
+            achieved = best.group_cost_words
+            exact = best.exact
+        else:
+            if rung == "beam":
+                res = fusion.beam_merge_cuts(g, sram_budget_words=budget)
+            elif rung == "greedy":
+                res = fusion.greedy_merge_cuts(g, sram_budget_words=budget)
+            else:  # lbl — always buffer-minimal, the feasibility floor
+                res = fusion.DPResult(
+                    cuts=lbl,
+                    group_cost_words=fusion._graph_cost(g, lbl),
+                    n_groups=g.n_nodes,
+                    engine="lbl",
+                )
+            # The lbl row rides along so the SRAM prefilter can never
+            # reject the whole batch when *any* grouping is feasible.
+            cuts = np.unique(np.stack([res.cuts, lbl]), axis=0)
+            engine, achieved, exact = res.engine, res.group_cost_words, False
+        dt = self.clock() - t0
+        self._rung_ewma[rung] += _EWMA_ALPHA * (dt - self._rung_ewma[rung])
+
+        now = self.clock()
+        if now > adm.deadline:
+            raise DeadlineExceeded(
+                f"grouping search ({rung}) overran the deadline by "
+                f"{now - adm.deadline:.3f}s"
+            )
+        return _Resolved(
+            adm=adm,
+            cuts=cuts,
+            engine=engine,
+            rung=rung,
+            exact=exact,
+            quality_bound=achieved / _lower_bound_cost(g),
+        )
+
+    # ------------------------------------------------------------------
+    # micro-batched sweep
+    # ------------------------------------------------------------------
+
+    def _with_retries(self, fn: Callable[[], flow.FleetResult]):
+        """Bounded retry-with-backoff for transient (non-evaluator)
+        failures.  Typed evaluator errors are deterministic verdicts and
+        propagate immediately."""
+        last: BaseException | None = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn()
+            except EvaluatorError:
+                raise
+            except Exception as e:  # transient: injected faults, races
+                last = e
+                self._counters["transient_retries"] += 1
+                if attempt < self.max_retries and self.backoff_seconds > 0:
+                    time.sleep(self.backoff_seconds * (2**attempt))
+        raise TransientFailure(
+            f"sweep failed after {self.max_retries + 1} attempts "
+            f"({type(last).__name__}: {last})",
+            cause=last,
+            attempts=self.max_retries + 1,
+        )
+
+    def _sweep_group(self, group: list[_Resolved]) -> None:
+        """One run_fleet program for a (budget, constraints, space) group;
+        on a group-level typed failure, falls back to singleton sweeps so
+        one infeasible request cannot poison its neighbours."""
+        adm0 = group[0].adm
+
+        def run() -> flow.FleetResult:
+            if self.faults is not None and hasattr(
+                self.faults, "before_sweep"
+            ):
+                self.faults.before_sweep(len(group))
+            return flow.run_fleet(
+                [r.adm.g for r in group],
+                config_space=adm0.config_space,
+                constraints=adm0.constraints,
+                groupings=[r.cuts for r in group],
+                sram_budget_words=adm0.budget,
+            )
+
+        t0 = self.clock()
+        try:
+            fleet = self._with_retries(run)
+        except EvaluatorError as e:
+            if len(group) == 1:
+                self._reject(group[0].adm.request_id, e, group[0].adm.submitted_at)
+                return
+            for r in group:  # isolate: re-sweep each request alone
+                self._sweep_group([r])
+            return
+        self._sweep_ewma += _EWMA_ALPHA * (
+            (self.clock() - t0) - self._sweep_ewma
+        )
+
+        for r, fr in zip(group, fleet.results):
+            adm = r.adm
+            resp = PlanResponse(
+                request_id=adm.request_id,
+                ok=True,
+                # run_fleet reports the explicit batch as "explicit";
+                # restore the ladder's true provenance.
+                plan=dataclasses.replace(fr, search_engine=r.engine),
+                engine=r.engine,
+                rung=r.rung,
+                exact=r.exact,
+                degraded=r.rung != "exact",
+                quality_bound=r.quality_bound,
+                latency_seconds=self.clock() - adm.submitted_at,
+            )
+            self._responses[adm.request_id] = resp
+            self._counters["completed"] += 1
+            if resp.degraded:
+                self._counters["degraded"] += 1
+            else:
+                self._cache_put(adm.cache_key, resp)
+
+    def tick(self) -> int:
+        """Process one micro-batch; returns how many responses were
+        produced.  Never raises for a request's failure — every outcome
+        becomes a typed response."""
+        self._ticks += 1
+        if self.faults is not None and hasattr(self.faults, "on_tick"):
+            self.faults.on_tick(self._ticks)
+
+        batch: list[_Admitted] = []
+        while self._queue and len(batch) < self.max_batch:
+            batch.append(self._queue.popleft())
+        if not batch:
+            return 0
+
+        groups: dict[tuple, list[_Resolved]] = collections.OrderedDict()
+        produced = 0
+        for adm in batch:
+            try:
+                r = self._resolve(adm)
+            except EvaluatorError as e:
+                self._reject(adm.request_id, e, adm.submitted_at)
+                produced += 1
+                continue
+            except Exception as e:
+                self._reject(
+                    adm.request_id,
+                    TransientFailure(
+                        f"grouping search failed "
+                        f"({type(e).__name__}: {e})",
+                        cause=e,
+                        attempts=1,
+                    ),
+                    adm.submitted_at,
+                )
+                produced += 1
+                continue
+            key = (
+                adm.budget,
+                adm.constraints.as_row().tobytes(),
+                adm.config_space,
+            )
+            groups.setdefault(key, []).append(r)
+
+        for group in groups.values():
+            self._sweep_group(group)
+            produced += len(group)
+        return produced
+
+    # ------------------------------------------------------------------
+    # retrieval / convenience
+    # ------------------------------------------------------------------
+
+    def collect(self, request_id: int) -> PlanResponse | None:
+        """Pop the response for ``request_id`` (None while pending)."""
+        return self._responses.pop(request_id, None)
+
+    def drain(self, max_ticks: int = 10_000) -> None:
+        """Tick until the queue is empty."""
+        while self._queue and max_ticks > 0:
+            self.tick()
+            max_ticks -= 1
+
+    def plan(self, request: PlanRequest) -> PlanResponse:
+        """One-shot convenience: submit, drain, collect."""
+        rid = self.submit(request)
+        self.drain()
+        resp = self.collect(rid)
+        assert resp is not None  # drain() guarantees an answer
+        return resp
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def stats(self) -> dict:
+        """Service accounting: counters, plan-cache and executable-cache
+        stats, ladder EWMAs."""
+        return {
+            "counters": dict(self._counters),
+            "queue_depth": len(self._queue),
+            "ticks": self._ticks,
+            "plan_cache": self.plan_cache_stats(),
+            "sweep_cache": flow.sweep_cache_stats(),
+            "rung_ewma_seconds": dict(self._rung_ewma),
+            "sweep_ewma_seconds": self._sweep_ewma,
+        }

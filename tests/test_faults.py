@@ -1,0 +1,164 @@
+"""Fault-injection harness: corrupt graphs, chaos sweep, cache storms.
+
+The headline test drives >= 500 mixed requests — valid workloads
+interleaved with corrupt graphs, NaN budgets, expired deadlines,
+impossible constraints — through a PlanningService under active fault
+injection (transient sweep failures, search stalls, executable-cache
+eviction storms) and asserts the service contract: every request gets
+exactly one TYPED response (zero raw exceptions), and every non-degraded
+successful plan is bit-identical to the offline ``run_fleet`` answer.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import flow, service
+from repro.core.arch import paper_config_space
+from repro.core.errors import EvaluatorError, GraphValidationError
+from repro.core.service import PlanRequest, PlanningService
+from repro.testing import faults as F
+
+SPACE = paper_config_space()
+
+
+# ---------------------------------------------------------------------------
+# corrupt-graph builders: admission must catch every one
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("builder", F.CORRUPTIONS,
+                         ids=lambda b: b.__name__)
+def test_corruption_caught_by_revalidation(builder):
+    g = F._valid_graphs()[1]
+    bad = builder(g)
+    with pytest.raises(GraphValidationError):
+        bad.validate()
+    # and through the service boundary: a typed response, not a raise
+    resp = PlanningService(config_space=SPACE).plan(PlanRequest(graph=bad))
+    assert not resp.ok and isinstance(resp.error, GraphValidationError)
+
+
+def test_corruption_messages_name_the_offender():
+    g = F._valid_graphs()[0]
+    with pytest.raises(GraphValidationError, match="cyclic|topological"):
+        F.corrupt_graph_cyclic(g).validate()
+    with pytest.raises(GraphValidationError, match="words"):
+        F.corrupt_graph_negative_words(g).validate()
+    with pytest.raises(GraphValidationError, match="out of range"):
+        F.corrupt_graph_dangling(g).validate()
+    with pytest.raises(GraphValidationError, match="duplicate"):
+        F.corrupt_graph_duplicate_edge(g).validate()
+
+
+# ---------------------------------------------------------------------------
+# injector mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_storm_clears_executable_cache():
+    flow.clear_sweep_cache()
+    svc = PlanningService(
+        config_space=SPACE, faults=F.FaultInjector(evict_every=1),
+        backoff_seconds=0.0,
+    )
+    r = svc.plan(PlanRequest(graph=F._valid_graphs()[0]))
+    assert r.ok
+    # the storm fired before the sweep, so this tick recompiled from zero
+    assert svc.faults.counts["evict_storms"] >= 1
+
+
+def test_stall_trips_deadline():
+    inj = F.FaultInjector(stall_every=1, stall_seconds=0.05)
+    svc = PlanningService(config_space=SPACE, faults=inj,
+                          backoff_seconds=0.0)
+    r = svc.plan(PlanRequest(graph=F._valid_graphs()[0],
+                             deadline_seconds=0.02))
+    assert not r.ok
+    from repro.core.errors import DeadlineExceeded
+
+    assert isinstance(r.error, DeadlineExceeded)
+    assert inj.counts["stalls"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the chaos sweep
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_sweep_500_requests_all_typed():
+    n = 500
+    inj = F.FaultInjector(
+        transient_every=11,  # recurring transient sweep failures
+        stall_every=97, stall_seconds=0.001,  # occasional search stalls
+        evict_every=7,  # periodic executable-cache eviction storms
+    )
+    svc = PlanningService(
+        config_space=SPACE, faults=inj, backoff_seconds=0.0,
+        max_batch=16, max_queue_depth=n,
+    )
+
+    labels = {}
+    for label, req in F.chaos_requests(n, seed=7):
+        labels[svc.submit(req)] = label
+    svc.drain()
+
+    outcomes = collections.Counter()
+    ok_exact = []  # (graph, budget, response) for bit-identity audit
+    for rid, label in labels.items():
+        resp = svc.collect(rid)
+        assert resp is not None, f"request {rid} ({label}) got no response"
+        if resp.ok:
+            outcomes[f"{label}:ok"] += 1
+            if not resp.degraded and not resp.from_cache:
+                ok_exact.append((rid, resp))
+        else:
+            # the whole point: EVERY failure is a typed evaluator error
+            assert isinstance(resp.error, EvaluatorError), (
+                f"request {rid} ({label}) leaked "
+                f"{type(resp.error).__name__}"
+            )
+            outcomes[f"{label}:{resp.error_type}"] += 1
+
+    # hostile inputs were actually exercised, and valid ones succeeded
+    assert sum(v for k, v in outcomes.items() if k.startswith("valid:")) > 0
+    assert any(":GraphValidationError" in k for k in outcomes)
+    assert any(":DeadlineExceeded" in k for k in outcomes)
+    assert inj.counts["injected_transients"] > 0
+    assert inj.counts["evict_storms"] > 0
+
+    # bit-identity audit: sample non-degraded plans against offline
+    by_key = {}
+    for rid, resp in ok_exact:
+        req = _REQUESTS_BY_RID[rid]
+        by_key.setdefault(
+            (req.graph, req.sram_budget_words), resp
+        )
+    for (g, budget), resp in list(by_key.items())[:12]:
+        ref = flow.run_fleet(
+            [g], config_space=SPACE, groupings="search",
+            sram_budget_words=budget,
+        ).results[0]
+        assert np.array_equal(resp.plan.best_cuts, ref.best_cuts)
+        assert resp.plan.best_metrics == ref.best_metrics
+        assert resp.plan.best_hw == ref.best_hw
+
+
+# chaos_requests yields the request objects; the audit above needs them
+# back by rid, so the test records them here as it submits.
+_REQUESTS_BY_RID = {}
+
+
+@pytest.fixture(autouse=True)
+def _capture_requests(monkeypatch):
+    _REQUESTS_BY_RID.clear()
+    orig = PlanningService.submit
+
+    def recording_submit(self, request):
+        rid = orig(self, request)
+        _REQUESTS_BY_RID[rid] = request
+        return rid
+
+    monkeypatch.setattr(PlanningService, "submit", recording_submit)
+    yield
+    _REQUESTS_BY_RID.clear()

@@ -1,0 +1,86 @@
+"""Hypothesis property: the tracing frontend never leaks raw exceptions.
+
+Random degenerate jax functions — hostile shapes, unsupported primitives,
+batch sizes != 1, rank mismatches — must make ``frontend.trace`` either
+return a valid :class:`GraphIR` or raise a TYPED error
+(:class:`UnsupportedOpError` / :class:`GraphValidationError`), never a raw
+``KeyError`` / ``IndexError`` / ``AttributeError`` from inside the tracer.
+Deterministic per-op locks live in tests/test_frontend_ops.py (this module
+is skipped entirely when hypothesis is absent, per suite convention).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontend as F
+from repro.core.errors import GraphValidationError, UnsupportedOpError
+from repro.core.ir import GraphIR
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# A grab-bag of lowerable and non-lowerable computations; the property is
+# about the *failure mode*, not which bucket each lands in.
+_OPS = {
+    "relu": lambda x: jax.nn.relu(x),
+    "tanh": lambda x: jnp.tanh(x),  # unsupported elementwise primitive
+    "sum": lambda x: jnp.sum(x),  # reduction: not a layer
+    "transpose": lambda x: x.T if x.ndim >= 2 else x,
+    "sort": lambda x: jnp.sort(x),  # unsupported primitive
+    "square": lambda x: x * x,  # self-multiply: odd elementwise arity
+    "add_self": lambda x: x + x,
+    "reshape": lambda x: x.reshape(-1),
+    "slice": lambda x: x[..., :1],
+    "cumsum": lambda x: jnp.cumsum(x),
+}
+
+
+@given(
+    op_names=st.lists(
+        st.sampled_from(sorted(_OPS)), min_size=1, max_size=3
+    ),
+    shape=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+)
+@settings(max_examples=60, deadline=None)
+def test_trace_failures_are_typed(op_names, shape):
+    def fn(x):
+        for name in op_names:
+            x = _OPS[name](x)
+        return x
+
+    try:
+        g = F.trace(fn, _sds(*shape), name="fuzz")
+    except (UnsupportedOpError, GraphValidationError):
+        return  # a typed rejection is a correct outcome
+    except (KeyError, IndexError, AttributeError, TypeError,
+            AssertionError) as e:  # pragma: no cover - the bug we hunt
+        pytest.fail(
+            f"trace leaked raw {type(e).__name__} for "
+            f"{op_names} @ {shape}: {e}"
+        )
+    assert isinstance(g, GraphIR)
+    g.validate()  # anything traced must satisfy every IR invariant
+
+
+@given(
+    matmul_k=st.integers(1, 16),
+    batch=st.integers(1, 4),
+    features=st.integers(1, 16),
+)
+@settings(max_examples=30, deadline=None)
+def test_trace_matmul_shapes_are_typed(matmul_k, batch, features):
+    """Weight/activation shape mismatches and batch > 1 must come back as
+    typed errors (or trace fine), never raw jax/tracer internals."""
+    w = _sds(matmul_k, features)
+    x = _sds(batch, matmul_k)
+    try:
+        g = F.trace(lambda w, x: x @ w, w, x, name="fuzz-mm")
+    except (UnsupportedOpError, GraphValidationError):
+        return
+    assert isinstance(g, GraphIR)
+    g.validate()
