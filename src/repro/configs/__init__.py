@@ -16,6 +16,7 @@ from . import (  # noqa: E402
     internvl2_1b,
     jamba_1_5_large,
     llama4_maverick_400b,
+    mixtral_8x7b,
     phi3_mini_3_8b,
     qwen3_0_6b,
     seamless_m4t_v2,
@@ -26,7 +27,7 @@ REGISTRY: dict[str, ModelConfig] = {
     for m in (
         llama4_maverick_400b, arctic_480b, internvl2_1b, granite_34b,
         phi3_mini_3_8b, gemma3_27b, qwen3_0_6b, seamless_m4t_v2,
-        jamba_1_5_large, falcon_mamba_7b,
+        jamba_1_5_large, falcon_mamba_7b, mixtral_8x7b,
     )
 }
 
@@ -39,13 +40,16 @@ ALIASES = {
     "granite": "granite-34b",
     "phi3": "phi3-mini-3.8b",
     "phi3-mini": "phi3-mini-3.8b",
+    "phi3-mini-3-8b": "phi3-mini-3.8b",  # resolve() maps _ -> - but not .
     "gemma3": "gemma3-27b",
     "qwen3": "qwen3-0.6b",
+    "qwen3-0-6b": "qwen3-0.6b",
     "seamless": "seamless-m4t-large-v2",
     "seamless-m4t-v2": "seamless-m4t-large-v2",
     "jamba": "jamba-1.5-large-398b",
     "jamba-1.5-large": "jamba-1.5-large-398b",
     "falcon-mamba": "falcon-mamba-7b",
+    "mixtral": "mixtral-8x7b",
 }
 
 

@@ -1,3 +1,3 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The evaluator core: IR, tracing frontend, Eq. (1)-(4) metrics,
+fusion search, the (hw x grouping) sweep flow, and the planning service.
+See docs/ARCHITECTURE.md for how the pieces compose."""

@@ -84,18 +84,22 @@ class DLAConfig:
     # ---- compute geometry ---------------------------------------------------
     @property
     def pes_per_block(self) -> int:
+        """PEs in one block: the F2 x F3 tile."""
         return self.f2 * self.f3
 
     @property
     def n_blocks(self) -> int:
+        """Block count: F1 output-channel x F4 input-channel tiles."""
         return self.f1 * self.f4
 
     @property
     def n_pes(self) -> int:
+        """Total processing elements across all blocks."""
         return self.n_blocks * self.pes_per_block
 
     @property
     def macs_per_cycle(self) -> int:
+        """Peak MAC throughput (hsiao PEs carry 9 multipliers, vwa 1)."""
         return self.n_pes * self.mults_per_pe
 
     @property
@@ -126,6 +130,7 @@ class DLAConfig:
 
     # ---- Eq. (4) area --------------------------------------------------------
     def area_pe_um2(self) -> float:
+        """A_PB: the PE-array area term of Eq. (4)."""
         per_pe = self.mults_per_pe * self.area_per_mult_um2 + self.area_per_pe_overhead_um2
         return self.n_pes * per_pe
 
@@ -165,6 +170,7 @@ class DLAConfig:
     )
 
     def describe(self) -> str:
+        """One-line human-readable summary of the design point."""
         return (
             f"{self.style}(F1={self.f1},F2={self.f2},F3={self.f3},F4={self.f4})"
             f" {self.macs_per_cycle} MAC/cyc {self.n_pes} PEs"
@@ -264,6 +270,7 @@ class Constraints:
     max_area_um2: float = 45e6  # 45,000,000 um^2
 
     def as_row(self) -> np.ndarray:
+        """The four bounds as a float64 row, metric order of Eq. (1)-(4)."""
         return np.asarray(
             [
                 self.max_bandwidth_words,
@@ -303,6 +310,8 @@ def paper_config_space() -> list[DLAConfig]:
 
 @dataclasses.dataclass(frozen=True)
 class TPUSpec:
+    """Per-chip TPU roofline parameters (compute/HBM/ICI peaks)."""
+
     name: str = "tpu_v5e"
     peak_flops: float = 197e12  # bf16 FLOP/s per chip
     hbm_bw: float = 819e9  # bytes/s per chip
@@ -314,15 +323,19 @@ class TPUSpec:
 
     @property
     def ici_bw(self) -> float:
+        """Aggregate interconnect bandwidth over all torus links."""
         return self.ici_bw_per_link * self.ici_links
 
     def compute_seconds(self, flops: float) -> float:
+        """Compute-bound time at peak FLOP/s."""
         return flops / self.peak_flops
 
     def memory_seconds(self, hbm_bytes: float) -> float:
+        """Memory-bound time at peak HBM bandwidth."""
         return hbm_bytes / self.hbm_bw
 
     def collective_seconds(self, coll_bytes: float) -> float:
+        """Interconnect-bound time at aggregate ICI bandwidth."""
         return coll_bytes / self.ici_bw
 
 

@@ -69,6 +69,7 @@ class InfeasibleBudgetError(EvaluatorError, ValueError):
 
     def __init__(self, message: str,
                  min_feasible_budget_words: float = float("nan")):
+        """Attach the smallest budget that would have admitted a plan."""
         super().__init__(message)
         self.min_feasible_budget_words = float(min_feasible_budget_words)
 
@@ -101,6 +102,7 @@ class TransientFailure(EvaluatorError):
 
     def __init__(self, message: str, *, cause: BaseException | None = None,
                  attempts: int = 0):
+        """Record the last underlying exception and the attempt count."""
         super().__init__(message)
         self.cause = cause
         self.attempts = int(attempts)

@@ -56,6 +56,9 @@ CUT_BUCKET_FLOOR = 4
 
 @dataclasses.dataclass(frozen=True)
 class FlowResult:
+    """One graph's sweep outcome: the argmin (hw, cuts, metrics), the
+    candidate/feasibility accounting, timing split, and provenance."""
+
     best_hw: DLAConfig
     best_cuts: np.ndarray
     best_metrics: M.Metrics
@@ -76,6 +79,7 @@ class FlowResult:
     pareto: "ParetoFront | None" = None
 
     def describe(self) -> str:
+        """One-line summary: best hw, group sizes, and the four metrics."""
         return (
             f"best={self.best_hw.describe()} groups={list(self.group_sizes)} "
             f"BW={self.best_metrics.bandwidth_words/1e6:.2f}M words "
@@ -170,6 +174,7 @@ def sweep_cache_stats() -> dict:
 
 
 def clear_sweep_cache() -> None:
+    """Drop every cached sweep executable and zero the hit/miss stats."""
     with _SWEEP_CACHE_LOCK:
         _COMPILED_SWEEPS.clear()
         for k in _SWEEP_CACHE_STATS:
@@ -239,9 +244,11 @@ class ParetoFront:
 
     @property
     def size(self) -> int:
+        """Number of non-dominated points on the front."""
         return int(self.metrics.shape[0])
 
     def describe(self, limit: int = 8) -> str:
+        """Multi-line summary: front size plus the first ``limit`` rows."""
         lines = [
             f"pareto front: {self.size} of {self.n_feasible} feasible "
             f"(groupings={self.search_engine})"
@@ -554,6 +561,7 @@ class FleetResult:
     device_count: int = 1
 
     def describe(self) -> str:
+        """One-line summary of the fleet sweep (incl. mesh, if sharded)."""
         mesh = (
             f", {self.device_count}-device hardware mesh"
             if self.device_count > 1
@@ -623,6 +631,32 @@ def run_fleet(
     the LoopTree-style explorer output: thousands of
     (architecture x fusion plan) points scored per workload, reduced to
     the non-dominated set.
+
+    Example — two workloads, default space, per-workload fronts::
+
+        >>> from repro.core import flow
+        >>> from repro.core.ir import residual_block_ir, resnet18_ir
+        >>> fl = flow.run_fleet([residual_block_ir(), resnet18_ir()],
+        ...                     groupings="search", pareto=True)
+        >>> len(fl.results), fl.device_count
+        (2, 1)
+        >>> r = fl.results[1]                    # resnet18's FlowResult
+        >>> r.search_engine, r.best_cuts.dtype.name
+        ('frontier_dp', 'bool')
+        >>> r.pareto.metrics.shape[1]            # (bw, latency, energy, area)
+        4
+
+    Example — per-graph explicit cut batches (the service/bench form) and
+    a sharded hardware axis::
+
+        >>> import numpy as np
+        >>> gs = [residual_block_ir(), resnet18_ir()]
+        >>> batches = [np.stack([np.ones(g.n_edges, bool),    # layer-by-layer
+        ...                      np.zeros(g.n_edges, bool)])  # fully fused
+        ...            for g in gs]
+        >>> fl = flow.run_fleet(gs, groupings=batches, devices=1)
+        >>> [len(r.group_sizes) for r in fl.results]  # groups of best cuts
+        [1, 1]
     """
     if not irs:
         raise ValueError("empty fleet")
@@ -765,6 +799,7 @@ class FusionComparison:
     energy_reduction: float
 
     def describe(self) -> str:
+        """Three-line lbl -> fused table with percentage reductions."""
         return (
             f"BW  {self.lbl.bandwidth_words/1e6:8.2f}M -> {self.fused.bandwidth_words/1e6:8.2f}M  (-{self.bw_reduction*100:5.1f}%)\n"
             f"lat {self.lbl.latency_cycles/1e6:8.2f}M -> {self.fused.latency_cycles/1e6:8.2f}M  (-{self.latency_reduction*100:5.1f}%)\n"

@@ -13,6 +13,24 @@ jaxpr onto the paper's layer abstraction:
   1x1 convolution over ``M`` "pixels"; ``M == 1`` is tagged ``fc``).  A
   ``dot_general`` whose *both* operands are activations becomes ``actmul``
   (attention's QK^T / PV — the "kernel" operand is activation traffic);
+  batch dimensions fold into the contraction (``k *= B``) so one actmul
+  node prices all heads, and its O(S^2) score matrix is an explicit edge.
+  Two-activation products whose operands descend from the *same* dataflow
+  source (MoE's combine-weights einsum — a rearrangement of one tensor)
+  fold instead of minting a bogus giant actmul.  An activation against a
+  *batched weight* stack (MoE's ``(E, d, ff)`` expert einsums) expands
+  into ``E`` branch ``matmul`` nodes whose incoming edges carry the routed
+  per-expert capacity words — the producer becomes a *tuple* of node ids,
+  and downstream elementwise ops over equal-length tuples stay branched
+  (per-expert gate nodes) until a two-source product joins them;
+* ``scan``                  -> one ``scan`` node (SSM selective scan): a
+  weightless recurrent layer whose carry words (``d_state x d_inner``)
+  become :class:`LayerSpec` ``state_words`` — SRAM the carry occupies in
+  *every* grouping, priced by Eq. (4) and the buffer-feasibility checks.
+  The chunk-recurrent form (``repro.models.ssm.selective_scan_chunked``)
+  traces to the same node; splitting a model at a chunk boundary
+  (:func:`mamba_graph` with ``chunks > 1``) exposes the carry hand-off as
+  a real cuttable edge;
 * ``reduce_window_{max,sum,min}`` -> ``pool`` nodes, or — with
   ``fold_pool=True`` and a window that equals its stride — absorbed into
   the producing conv's ``pool_after`` (the DLA's inline pool unit, Fig. 1);
@@ -122,6 +140,14 @@ class _Tracer:
     def _add_node(self, spec: LayerSpec, act_in) -> int:
         node = _PendingNode(spec=spec, inputs={})
         for v, p in act_in:
+            if isinstance(p, tuple):
+                # Branch fan-in (expert stacks): the consumed tensor is the
+                # concatenation of the branch outputs — one edge per branch,
+                # words split evenly across the members.
+                w = max(1, _words(v.aval) // len(p))
+                for member in p:
+                    node.inputs[member] = max(node.inputs.get(member, 0), w)
+                continue
             if not isinstance(p, int):
                 continue  # graph-input operand: no producer node to fuse with
             w = _words(v.aval)
@@ -135,7 +161,7 @@ class _Tracer:
         are one read)."""
         by_src: dict[Any, int] = {}
         for v, p in act_in:
-            if not isinstance(p, int):
+            if not isinstance(p, (int, tuple)):
                 by_src[p] = max(by_src.get(p, 0), _words(v.aval))
         return sum(by_src.values())
 
@@ -196,14 +222,69 @@ class _Tracer:
         lhs, rhs = eqn.invars[0], eqn.invars[1]
         (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
         lshape, rshape = lhs.aval.shape, rhs.aval.shape
-        if any(lshape[d] != 1 for d in lb) or any(rshape[d] != 1 for d in rb):
-            raise UnsupportedOpError(f"{self.name}: trace dot_general with batch size 1")
+        # Batch dims are pairwise equal-sized in both operands (jax checks);
+        # B == 1 is the plain unbatched product.
+        B = int(math.prod(lshape[d] for d in lb))
         k = int(math.prod(lshape[d] for d in lc))
-        l_free = int(math.prod(lshape[d] for d in range(len(lshape)) if d not in lc))
-        r_free = int(math.prod(rshape[d] for d in range(len(rshape)) if d not in rc))
+        l_free = int(
+            math.prod(lshape[d] for d in range(len(lshape)) if d not in lc and d not in lb)
+        )
+        r_free = int(
+            math.prod(rshape[d] for d in range(len(rshape)) if d not in rc and d not in rb)
+        )
+        out = eqn.outvars[0]
         lhs_is_act = lhs in self.producer
         if len(act_in) == 2:
-            kind, m, n = "actmul", l_free, r_free
+            if self.producer[lhs] == self.producer[rhs] and isinstance(
+                self.producer[lhs], (int, tuple)
+            ):
+                # Both operands are views of ONE dataflow source (MoE's
+                # combine-weights einsum: dispatch one-hots x gates, both
+                # derived from the router) — a rearrangement, not a compute
+                # node.  Minting an actmul here would price B * k bogus
+                # MACs per output word.
+                self.producer[out] = self.producer[lhs]
+                return
+            # Attention-style activation product: the batch axes (heads)
+            # fold into the contraction/output so one node prices them all.
+            kind, k, m, n = "actmul", B * k, l_free, B * r_free
+        elif B > 1:
+            # One activation against a stacked weight tensor (MoE expert
+            # einsums, (E, d, ff)): E independent matmuls — expand into B
+            # branch nodes so each expert's routed capacity words become a
+            # real edge.  The out producer is the tuple of branch ids.
+            av = lhs if lhs_is_act else rhs
+            m = l_free if lhs_is_act else r_free
+            n = r_free if lhs_is_act else l_free
+            kind = "fc" if m == 1 else "matmul"
+            if _words(out.aval) != B * m * n:
+                raise UnsupportedOpError(
+                    f"{self.name}: batched dot_general output has "
+                    f"{_words(out.aval)} words, expected {B}*{m}*{n}"
+                )
+            p_act = self.producer[av]
+            if isinstance(p_act, tuple) and len(p_act) != B:
+                raise UnsupportedOpError(
+                    f"{self.name}: {len(p_act)}-branch operand into a "
+                    f"{B}-batched dot_general"
+                )
+            branch_words = max(1, _words(av.aval) // B)
+            ext = 0 if isinstance(p_act, (int, tuple)) else branch_words
+            ids = []
+            for b in range(B):
+                spec = LayerSpec(
+                    f"{kind}{len(self.nodes)}", kind, k, n, m, 1,
+                    ext_in_words=ext,
+                )
+                node = _PendingNode(spec=spec, inputs={})
+                if isinstance(p_act, tuple):
+                    node.inputs[p_act[b]] = branch_words  # branch b feeds b
+                elif isinstance(p_act, int):
+                    node.inputs[p_act] = branch_words  # fan-out (dispatch)
+                self.nodes.append(node)
+                ids.append(len(self.nodes) - 1)
+            self.producer[out] = tuple(ids)
+            return
         else:
             m, n = (l_free, r_free) if lhs_is_act else (r_free, l_free)
             kind = "fc" if m == 1 else "matmul"
@@ -211,12 +292,11 @@ class _Tracer:
         # projected query against the raw input) has no edge to fuse over:
         # its words stream from DRAM in every grouping.  Source nodes
         # already count all operands via in_words.
-        has_edge = any(isinstance(p, int) for _, p in act_in)
+        has_edge = any(isinstance(p, (int, tuple)) for _, p in act_in)
         ext = self._ext_words(act_in) if has_edge else 0
         spec = LayerSpec(
             f"{kind}{len(self.nodes)}", kind, k, n, m, 1, ext_in_words=ext
         )
-        out = eqn.outvars[0]
         if _words(out.aval) != m * n:
             raise UnsupportedOpError(
                 f"{self.name}: dot_general output has {_words(out.aval)} words, "
@@ -281,19 +361,68 @@ class _Tracer:
         self.producer[eqn.outvars[0]] = self._add_node(spec, act_in)
         return True
 
+    def eqn_scan(self, eqn, act_in) -> None:
+        """``lax.scan`` -> one recurrent ``scan`` node.  The carry operands'
+        words become ``state_words`` (summed over *all* carries by position
+        — an initial state built as ``jnp.zeros`` inside the traced fn is a
+        constant, not an activation, but still occupies the SRAM).  The node
+        frame is the largest stacked output (the per-step ys restacked over
+        the scan axis), so edge words stay consistent with consumers."""
+        p = eqn.params
+        nc, nk = int(p["num_consts"]), int(p["num_carry"])
+        state = int(
+            sum(_words(v.aval) for v in eqn.invars[nc : nc + nk])
+        )
+        ys = list(eqn.outvars[nk:]) or list(eqn.outvars[:1])
+        big = max(ys, key=lambda o: _words(o.aval))
+        c, h, w = _chw(tuple(big.aval.shape))
+        has_edge = any(isinstance(pp, (int, tuple)) for _, pp in act_in)
+        ext = self._ext_words(act_in) if has_edge else 0
+        spec = LayerSpec(
+            f"scan{len(self.nodes)}", "scan", c, c, h, w,
+            ext_in_words=ext, state_words=state,
+        )
+        node = self._add_node(spec, act_in)
+        for o in eqn.outvars:
+            self.producer[o] = node
+
     def eqn_default(self, eqn, act_in) -> None:
         """Fold, or join >= 2 distinct sources into an ``elementwise`` node
         (the graph input counts as a source, so a residual add of the raw
         input still surfaces as a join).  Operands read straight from the
         graph input have no producer edge to fuse over, so their words
         become the join's ``ext_in_words`` — DRAM traffic in every
-        grouping."""
+        grouping.  An op over >= 2 equal-length *tuple* producers (the
+        expert-branch gate: silu(w1_e) * w3_e) stays branched — one
+        ``elementwise`` node per member, pairwise — so the expert fan-out
+        topology survives until a real combine joins it."""
         distinct = {p for _, p in act_in}
         if len(distinct) >= 2:
             out = eqn.outvars[0]
             c, h, w = _chw(tuple(out.aval.shape))
+            if all(isinstance(p, tuple) for p in distinct) and (
+                len({len(p) for p in distinct}) == 1
+            ):
+                branches = sorted(distinct)
+                nb = len(branches[0])
+                total = _words(out.aval)
+                bw = max(1, total // nb)
+                hb = max(1, bw // c)
+                ids = []
+                for b in range(nb):
+                    spec = LayerSpec(
+                        f"gate{len(self.nodes)}", "elementwise", c, c, hb, 1
+                    )
+                    node = _PendingNode(spec=spec, inputs={})
+                    for t in branches:
+                        node.inputs[t[b]] = max(node.inputs.get(t[b], 0), bw)
+                    self.nodes.append(node)
+                    ids.append(len(self.nodes) - 1)
+                for o in eqn.outvars:
+                    self.producer[o] = tuple(ids)
+                return
             ext = self._ext_words(act_in)
-            if not any(isinstance(p, int) for p in distinct):
+            if not any(isinstance(p, (int, tuple)) for p in distinct):
                 # All operands are raw inputs: the node is a *source* and
                 # already reads in_words (one frame) — ext carries only the
                 # frames beyond that.
@@ -332,16 +461,29 @@ class _Tracer:
             elif prim in _REDUCE_WINDOW_PRIMS:
                 self.eqn_reduce_window(eqn, act_in)
             elif prim in _SPATIAL_REDUCE_PRIMS:
-                if not self.eqn_spatial_reduce(eqn, act_in):
-                    # Folding a reduction would emit a producer frame that
-                    # disagrees with its consumer edge words — refuse.
-                    raise UnsupportedOpError(
-                        f"{self.name}: {prim} over axes "
-                        f"{tuple(eqn.params['axes'])} on shape "
-                        f"{eqn.invars[0].aval.shape} is not representable "
-                        "(only square NHWC global spatial reductions map to "
-                        "pool nodes)"
-                    )
+                # Only an NHWC reduction over *both* spatial axes is
+                # pool-shaped; everything else (softmax / rmsnorm statistics
+                # over the channel axis, MoE routing sums over arbitrary
+                # axes) is a normalisation-style statistic that folds or
+                # joins like any elementwise op.
+                shape = eqn.invars[0].aval.shape
+                axes = tuple(sorted(int(a) for a in eqn.params["axes"]))
+                if len(shape) == 4 and axes == (1, 2):
+                    if not self.eqn_spatial_reduce(eqn, act_in):
+                        # A rectangular global reduction would emit a pool
+                        # whose SAME-geometry frame disagrees with the
+                        # traced output — refuse.
+                        raise UnsupportedOpError(
+                            f"{self.name}: {prim} over axes "
+                            f"{tuple(eqn.params['axes'])} on shape "
+                            f"{eqn.invars[0].aval.shape} is not representable "
+                            "(only square NHWC global spatial reductions map "
+                            "to pool nodes)"
+                        )
+                else:
+                    self.eqn_default(eqn, act_in)
+            elif prim == "scan":
+                self.eqn_scan(eqn, act_in)
             else:
                 self.eqn_default(eqn, act_in)
         if not self.nodes:
@@ -371,6 +513,26 @@ def trace(
     absorbs a window == stride pooling into its producing conv's
     ``pool_after`` when the pooled tensor has no other consumer.  ``names``
     optionally renames the nodes (length-checked).
+
+    Example — a gated MLP, weights as shape structs only::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core import frontend as F
+        >>> from repro.models import layers as L
+        >>> sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        >>> params = {"w1": sds(256, 1024), "w3": sds(256, 1024),
+        ...           "w2": sds(1024, 256)}
+        >>> g = F.trace(lambda p, x: L.mlp_block(p, x, "swiglu"),
+        ...             params, sds(128, 256), name="mlp")
+        >>> [n.kind for n in g.nodes]
+        ['matmul', 'matmul', 'elementwise', 'matmul']
+        >>> g.n_edges  # w1 -> gate, w3 -> gate, gate -> w2
+        3
+
+    Failures are typed: anything the layer abstraction cannot represent
+    raises :class:`repro.core.errors.UnsupportedOpError` (a subclass of
+    ``ValueError``), never a raw ``KeyError``/``IndexError`` — the planning
+    service's admission path relies on this contract.
     """
     if not args:
         raise UnsupportedOpError("trace() needs at least one example argument")
@@ -420,6 +582,8 @@ def trace(
 
 
 def rename_nodes(g: GraphIR, names: Sequence[str]) -> GraphIR:
+    """Rename every node (length-checked) — traced graphs get the
+    historical hand-builder names this way."""
     if len(names) != len(g.nodes):
         raise UnsupportedOpError(
             f"{g.name}: {len(names)} names for {len(g.nodes)} nodes "
@@ -560,3 +724,118 @@ def mlp_block_graph(
         else [f"{name}.w1", f"{name}.w2"]
     )
     return rename_nodes(g, names)
+
+
+# ---------------------------------------------------------------------------
+# Config-zoo builders: trace the real production-shape model blocks
+# ---------------------------------------------------------------------------
+
+
+def _zoo_seq_len(cfg, seq_len: int) -> int:
+    """Clamp/validate a trace sequence length against the config's MoE
+    group-limited routing (tokens must tile into routing groups)."""
+    if cfg.n_experts > 1:
+        sg = min(cfg.moe_group_size, seq_len)
+        if seq_len % sg:
+            raise UnsupportedOpError(
+                f"{cfg.name}: seq_len {seq_len} does not tile into MoE "
+                f"routing groups of {sg}"
+            )
+    return seq_len
+
+
+def transformer_graph(cfg, *, seq_len: int = 512,
+                      n_sublayers: int | None = None,
+                      name: str | None = None) -> GraphIR:
+    """One superblock (``cfg.pattern_period`` sublayers) of the config's
+    decoder trunk, traced from the real :mod:`repro.models.transformer`
+    forward pass via :func:`~repro.models.transformer.block_forward`.
+
+    Attention sublayers lower to the actmul pair (QK^T -> folded softmax ->
+    PV) with the O(S^2) score matrix as an explicit edge; mamba sublayers
+    contribute a recurrent ``scan`` node carrying ``d_inner x d_state``
+    ``state_words``; MoE sublayers expand into router + E expert branches +
+    combine.  ``n_sublayers`` overrides the traced depth (default: one full
+    pattern period, so jamba's 1:7 attn:mamba interleave and llama4's
+    alternating dense/MoE both appear once)."""
+    from ..configs.base import RunConfig
+    from ..models import transformer as T
+
+    count = cfg.pattern_period if n_sublayers is None else n_sublayers
+    kinds = cfg.sublayer_kinds(0, count)
+    seq_len = _zoo_seq_len(cfg, seq_len)
+    params = T.sublayer_param_specs(cfg, kinds)
+    rc = RunConfig()
+    return trace(
+        lambda p, x: T.block_forward(p, x, cfg, kinds, rc=rc,
+                                     attn_impl="reference"),
+        params,
+        _sds(1, seq_len, cfg.d_model),
+        name=name or f"{cfg.name}.block",
+    )
+
+
+def mamba_graph(cfg, *, seq_len: int = 512, chunks: int = 1,
+                name: str | None = None) -> GraphIR:
+    """One mamba mixer block traced from
+    :func:`repro.models.ssm.mamba_block` (chunk-recurrent selective scan).
+
+    ``chunks > 1`` splits the sequence and threads the SSM cache between
+    the calls — the ``(d_inner, d_state)`` carry hand-off and the
+    ``(conv-1)``-token convolution tail both surface as real edges, so the
+    fusion search sees the chunk boundary as a cut point."""
+    import jax.numpy as jnp
+
+    from ..models import ssm as SSM
+
+    if "mamba" not in cfg.layer_pattern:
+        raise UnsupportedOpError(f"{cfg.name}: no mamba sublayers in pattern")
+    if chunks < 1 or seq_len % chunks:
+        raise UnsupportedOpError(
+            f"{cfg.name}: seq_len {seq_len} does not split into "
+            f"{chunks} chunks"
+        )
+    params = SSM.mamba_param_specs(cfg)
+    step = seq_len // chunks
+
+    def fn(p, x):
+        if chunks == 1:
+            return SSM.mamba_block(p, x, cfg, impl="chunked", chunk=step)[0]
+        cache = {
+            "conv": jnp.zeros((1, cfg.ssm_conv - 1, cfg.d_inner), x.dtype),
+            "h": jnp.zeros((1, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        }
+        outs = []
+        for i in range(chunks):
+            xi = jax.lax.slice_in_dim(x, i * step, (i + 1) * step, axis=1)
+            y, cache = SSM.mamba_block(p, xi, cfg, cache, impl="chunked",
+                                       chunk=step)
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1)
+
+    return trace(
+        fn, params, _sds(1, seq_len, cfg.d_model),
+        name=name or f"{cfg.name}.mamba",
+    )
+
+
+def moe_block_graph(cfg, *, seq_len: int = 512,
+                    name: str | None = None) -> GraphIR:
+    """One MoE FFN traced from :func:`repro.models.moe.moe_block`: a router
+    ``matmul``, a dispatch ``actmul`` whose routed one-hots descend from the
+    router, ``E`` expert branches whose incoming edges carry the routed
+    capacity words (``C = moe._capacity`` — ``capacity_factor``-scaled), and
+    a combine ``actmul`` joining the branches against the router's combine
+    weights (arctic's parallel dense-residual MLP appears alongside)."""
+    from ..models import moe as MOE
+
+    if cfg.n_experts <= 1:
+        raise UnsupportedOpError(f"{cfg.name}: config has no MoE layers")
+    seq_len = _zoo_seq_len(cfg, seq_len)
+    params = MOE.moe_param_specs(cfg)
+    return trace(
+        lambda p, x: MOE.moe_block(p, x, cfg)[0],
+        params,
+        _sds(1, seq_len, cfg.d_model),
+        name=name or f"{cfg.name}.moe",
+    )

@@ -160,6 +160,7 @@ def cut_group_labels(g: GraphIR, cuts: np.ndarray) -> np.ndarray:
 
 
 def groups_from_labels(labels: np.ndarray) -> list[list[int]]:
+    """Component labels (node -> group id) to explicit member lists."""
     groups: list[list[int]] = [[] for _ in range(int(labels.max()) + 1)]
     for i, lab in enumerate(labels):
         groups[int(lab)].append(i)
@@ -309,11 +310,13 @@ def group_max_intermediate(feat: np.ndarray, cuts: np.ndarray) -> float:
     """Largest on-chip intermediate implied by a *chain* grouping (words):
     an internal producer holds its **pre-pool** frame (the inline pool only
     reduces the DRAM write-out path) and its fused consumer holds the full
-    input operand."""
-    end = np.concatenate([cuts, [True]])
-    held = np.maximum(feat[:-1, M.F_OUT_PRE], feat[1:, M.F_IN])
-    inter = np.where(end[:-1], 0.0, held)
-    return float(inter.max(initial=0.0))
+    input operand.  A node's recurrent ``state_words`` carry occupies SRAM
+    in every grouping, on top of any fused input it holds."""
+    cuts = np.asarray(cuts, dtype=bool)
+    in_term = np.where(cuts, 0.0, feat[1:, M.F_IN]) + feat[1:, M.F_STATE]
+    out_term = np.where(cuts, 0.0, feat[:-1, M.F_OUT_PRE])
+    held = np.maximum(in_term, out_term)
+    return float(max(held.max(initial=0.0), float(feat[0, M.F_STATE])))
 
 
 def graph_max_intermediate(g: GraphIR, cuts: np.ndarray) -> float:
@@ -331,7 +334,11 @@ def graph_max_intermediate(g: GraphIR, cuts: np.ndarray) -> float:
             internal_in[e.dst] += e.words
             internal_out[e.src] = True
     need = np.where(internal_out, feat[:, M.F_OUT_PRE], 0.0)
-    return float(max(need.max(initial=0.0), internal_in.max(initial=0.0)))
+    # A recurrent carry is held for the node's whole execution, whether or
+    # not its inputs are fused — it adds to the node's on-chip term in
+    # every grouping.
+    in_term = internal_in + feat[:, M.F_STATE]
+    return float(max(need.max(initial=0.0), in_term.max(initial=0.0)))
 
 
 def graph_max_intermediate_batch(g: GraphIR, cuts_batch: np.ndarray) -> np.ndarray:
@@ -341,6 +348,7 @@ def graph_max_intermediate_batch(g: GraphIR, cuts_batch: np.ndarray) -> np.ndarr
     cuts = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
     unc = (~cuts).astype(np.float64)
     internal_in = unc @ ga.win_dst  # (C, L) summed internal incoming words
+    internal_in += ga.feat[None, :, M.F_STATE]  # carry held in every grouping
     has_internal_out = (unc @ ga.inc_src) > 0.0
     need = np.where(has_internal_out, ga.feat[None, :, M.F_OUT_PRE], 0.0)
     return np.maximum(
@@ -371,6 +379,7 @@ def padded_max_intermediate_batch(pg, cuts_batch: np.ndarray) -> np.ndarray:
     win_dst = np.zeros((E_b, L_b))
     win_dst[np.arange(E_b), pg.edst] = pg.ewords  # padded rows: 0 words at 0
     internal_in = unc @ win_dst  # (C, L_b) summed internal incoming words
+    internal_in += pg.feat[None, :, M.F_STATE]  # padded rows: state 0, inert
     has_internal_out = (unc @ inc_src) > 0.0
     need = np.where(has_internal_out, pg.feat[None, :, M.F_OUT_PRE], 0.0)
     return np.maximum(
@@ -387,6 +396,7 @@ def padded_feasible_mask_batch(
 
 
 def buffer_feasible(feat: np.ndarray, cuts: np.ndarray, sram_budget_words: float) -> bool:
+    """Chain grouping fits the budget (scalar oracle)."""
     return group_max_intermediate(feat, cuts) <= sram_budget_words
 
 
@@ -394,9 +404,15 @@ def feasible_mask_batch(
     feat: np.ndarray, cuts_batch: np.ndarray, sram_budget_words: float
 ) -> np.ndarray:
     """(C,) bool — vectorised chain buffer feasibility for a batch of groupings."""
-    held = np.maximum(feat[:-1, M.F_OUT_PRE], feat[1:, M.F_IN])
-    inter = np.where(cuts_batch, 0.0, held[None, :])
-    return inter.max(axis=1, initial=0.0) <= sram_budget_words
+    cuts_batch = np.atleast_2d(np.asarray(cuts_batch, dtype=bool))
+    in_term = (
+        np.where(cuts_batch, 0.0, feat[None, 1:, M.F_IN])
+        + feat[None, 1:, M.F_STATE]
+    )
+    out_term = np.where(cuts_batch, 0.0, feat[None, :-1, M.F_OUT_PRE])
+    inter = np.maximum(in_term, out_term).max(axis=1, initial=0.0)
+    inter = np.maximum(inter, float(feat[0, M.F_STATE]))
+    return inter <= sram_budget_words
 
 
 # ---------------------------------------------------------------------------
@@ -406,6 +422,9 @@ def feasible_mask_batch(
 
 @dataclasses.dataclass(frozen=True)
 class DPResult:
+    """A grouping-search answer: cut vector, Eq. (1) group cost, and
+    engine provenance (see ``exact``)."""
+
     cuts: np.ndarray
     group_cost_words: float  # Eq. (1) minus the grouping-independent weights
     n_groups: int
@@ -417,6 +436,7 @@ class DPResult:
 
     @property
     def exact(self) -> bool:
+        """True when the engine certifies a global optimum."""
         return self.engine in ("chain_dp", "frontier_dp", "exhaustive")
 
 
@@ -443,6 +463,15 @@ def optimal_cuts_dp(
     ins = np.concatenate([feat[:1, M.F_IN], ewords])
     outs = feat[:, M.F_OUT]
     pre = feat[:, M.F_OUT_PRE]
+    state = feat[:, M.F_STATE]
+    # A recurrent carry occupies SRAM in *every* grouping — if any node's
+    # state alone exceeds the budget, no partition is feasible.
+    if state.max(initial=0.0) > sram_budget_words:
+        raise InfeasibleBudgetError(
+            "no feasible grouping under the SRAM budget: a recurrent "
+            "state carry alone exceeds it",
+            min_feasible_budget_words=float(state.max()),
+        )
     INF = float("inf")
     dp = np.full(L + 1, INF)
     back = np.full(L + 1, -1, dtype=np.int64)
@@ -457,7 +486,10 @@ def optimal_cuts_dp(
             # consumer's IF operand) on chip — same bound as
             # graph_max_intermediate.
             if i < j - 1:
-                max_inter = max(max_inter, pre[i], ewords[i])
+                # fused edge i: consumer i+1 holds the edge words plus its
+                # recurrent carry (carries of cut-input nodes are covered
+                # by the global precheck above)
+                max_inter = max(max_inter, pre[i], ewords[i] + state[i + 1])
             if max_inter > sram_budget_words:
                 break  # growing the group further only increases max_inter
             cost = dp[i] + ins[i] + outs[j - 1]
@@ -657,11 +689,15 @@ def _forced_cut_words_min(words: np.ndarray, budget: float) -> float:
     enumerating the 2^d subsets is cheaper than a knapsack)."""
     d = len(words)
     total = float(words.sum())
-    if d == 0 or total <= budget:
+    if total <= budget:
         return 0.0
+    if d == 0:
+        return float("inf")  # a state-only over-budget node: infeasible
     bits = ((np.arange(1 << d)[:, None] >> np.arange(d)) & 1).astype(bool)
     cutw = bits @ words
     ok = (total - cutw) <= budget
+    if not ok.any():  # even all-cut leaves the node over budget
+        return float("inf")
     return float(cutw[ok].min())
 
 
@@ -709,7 +745,11 @@ def frontier_dp_min_bw(
     node_lb = pt.sink_charge.copy()
     if finite:
         for v in range(L):
-            node_lb[v] += _forced_cut_words_min(pt.in_words[v], budget)
+            # the node's recurrent carry shrinks the budget its uncut
+            # incoming sum must fit within
+            node_lb[v] += _forced_cut_words_min(
+                pt.in_words[v], budget - float(pt.state_words[v])
+            )
     suffix_lb = np.zeros(L + 1)
     suffix_lb[:L] = np.cumsum(node_lb[order][::-1])[::-1]
 
@@ -733,8 +773,13 @@ def frontier_dp_min_bw(
         bits = ((np.arange(1 << d)[:, None] >> np.arange(d)) & 1).astype(bool)
         cutw = bits @ w if d else np.zeros(1)
         feas_p = np.ones(1 << d, dtype=bool)
+        if finite:
+            # v's uncut incoming sum plus its recurrent carry must fit
+            # (applies even at d == 0: a state-only node can be infeasible)
+            feas_p &= (
+                float(w.sum()) - cutw + float(pt.state_words[v])
+            ) <= budget
         if finite and d:
-            feas_p &= (float(w.sum()) - cutw) <= budget
             # an uncut out-edge pins the producer's pre-pool frame on chip
             ok_uncut = pt.prepool_words[srcs] <= budget
             feas_p &= (bits | ok_uncut[None, :]).all(axis=1)

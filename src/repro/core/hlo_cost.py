@@ -87,6 +87,8 @@ def _dims_of(shape_text: str) -> list[int]:
 
 @dataclasses.dataclass
 class Cost:
+    """Accumulated FLOP/byte/collective totals for an HLO (sub)tree."""
+
     dot_flops: float = 0.0
     elem_flops: float = 0.0
     bytes: float = 0.0  # Eq.(1) fusion-group model (upper bound)
@@ -96,6 +98,7 @@ class Cost:
     coll_count: float = 0.0
 
     def add(self, other: "Cost", mult: float = 1.0):
+        """Accumulate ``other`` scaled by ``mult`` (loop trip counts)."""
         self.dot_flops += other.dot_flops * mult
         self.elem_flops += other.elem_flops * mult
         self.bytes += other.bytes * mult
@@ -136,7 +139,10 @@ class _Op:
 
 
 class HloModuleCost:
+    """Static FLOP/byte/collective cost model over parsed HLO text."""
+
     def __init__(self, hlo_text: str):
+        """Parse ``hlo_text`` into per-computation op lists."""
         self.computations: dict[str, list[_Op]] = {}
         self._parse(hlo_text)
         self._memo: dict[str, Cost] = {}
@@ -179,6 +185,7 @@ class HloModuleCost:
         return max(self.computations, key=lambda c: len(self.computations[c]))
 
     def total(self) -> Cost:
+        """Cost of the module's entry computation."""
         return self.comp_cost(self.entry)
 
     # ------------------------------------------------------------------
@@ -223,6 +230,7 @@ class HloModuleCost:
 
     # ------------------------------------------------------------------
     def comp_cost(self, name: str) -> Cost:
+        """Memoised cost of one named computation (callees included)."""
         if name in self._memo:
             return self._memo[name]
         self._memo[name] = Cost()  # cycle guard
@@ -410,4 +418,5 @@ class HloModuleCost:
 
 
 def module_cost(hlo_text: str) -> Cost:
+    """One-shot convenience: parse + entry-computation cost."""
     return HloModuleCost(hlo_text).total()

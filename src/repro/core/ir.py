@@ -50,8 +50,10 @@ from .errors import GraphValidationError
 # Layer kinds.  "conv" and "fc" carry weights; "pool" is weightless; "matmul"
 # covers transformer projections (weights) and "actmul" covers activation x
 # activation products (attention QK^T / PV) whose "weights" are activations
-# and therefore count as input traffic, not weight traffic.
-KINDS = ("conv", "pool", "fc", "matmul", "actmul", "elementwise")
+# and therefore count as input traffic, not weight traffic.  "scan" is a
+# recurrent node (SSM selective scan): weightless like elementwise, but its
+# ``state_words`` carry occupies SRAM in every grouping.
+KINDS = ("conv", "pool", "fc", "matmul", "actmul", "elementwise", "scan")
 
 # Integer-valued LayerSpec fields and the floor each must satisfy.  NaN,
 # inf, floats and negative word counts are all rejected here — the
@@ -62,6 +64,7 @@ _LAYER_INT_FIELDS = (
     ("n_in", 1), ("n_out", 1), ("h_in", 1), ("w_in", 1),
     ("kh", 1), ("kw", 1), ("stride", 1), ("pool_after", 1),
     ("flops_per_mac", 1), ("groups", 1), ("ext_in_words", 0),
+    ("state_words", 0),
 )
 
 
@@ -114,6 +117,10 @@ class LayerSpec:
     *regardless of grouping* — operands not covered by any graph edge (a
     join that consumes the raw network input re-reads it in every
     grouping, because there is no producer node to fuse with).
+    ``state_words`` > 0 is a recurrent carry (``d_state x d_inner`` for an
+    SSM selective scan): words that live in SRAM for the node's whole
+    execution, in *every* grouping, on top of any streamed input frame —
+    Eq. (4) and buffer feasibility both charge them.
     """
 
     name: str
@@ -129,6 +136,7 @@ class LayerSpec:
     flops_per_mac: int = 2
     groups: int = 1
     ext_in_words: int = 0
+    state_words: int = 0
 
     def __post_init__(self):
         validate_layer(self)
@@ -136,10 +144,12 @@ class LayerSpec:
     # ---- derived geometry (SAME padding; stride then absorbed pool) --------
     @property
     def h_out(self) -> int:
+        """Output height: SAME-padding stride then the absorbed pool."""
         return max(1, self.h_in // self.stride // self.pool_after)
 
     @property
     def w_out(self) -> int:
+        """Output width: SAME-padding stride then the absorbed pool."""
         base = self.w_in // self.stride
         return max(1, base // self.pool_after)
 
@@ -177,7 +187,8 @@ class LayerSpec:
 
     @property
     def macs(self) -> int:
-        if self.kind in ("pool", "elementwise"):
+        """MAC count of the layer (zero for weightless kinds)."""
+        if self.kind in ("pool", "elementwise", "scan"):
             return 0
         return (
             self.contracted_channels
@@ -190,9 +201,11 @@ class LayerSpec:
 
     @property
     def flops(self) -> int:
+        """FLOPs at 2 per MAC."""
         return self.macs * self.flops_per_mac
 
     def describe(self) -> str:
+        """One-line geometry/kernel/weight/MAC summary."""
         grp = f" g={self.groups}" if self.groups > 1 else ""
         return (
             f"{self.name:12s} {self.kind:5s} N={self.n_in:5d} M={self.n_out:5d} "
@@ -222,6 +235,7 @@ def _feature_row(l: LayerSpec) -> list[float]:
         l.n_out,
         (l.h_in // l.stride) * (l.w_in // l.stride),
         l.ext_in_words,
+        l.state_words,
     ]
 
 
@@ -244,10 +258,12 @@ class NetworkIR:
 
     @property
     def total_macs(self) -> int:
+        """Network-total MAC count."""
         return sum(l.macs for l in self.layers)
 
     @property
     def total_weight_words(self) -> int:
+        """Network-total weight words (read once per inference, Eq. (1))."""
         return sum(l.weight_words for l in self.layers)
 
     # ---- feature matrix for the vectorised metric kernels ------------------
@@ -264,6 +280,7 @@ class NetworkIR:
         "n_out",
         "pixels_out",
         "ext_in_words",
+        "state_words",
     )
 
     def feature_matrix(self) -> np.ndarray:
@@ -412,6 +429,7 @@ def lm_ir(
 
 
 def chain_ir(name: str, layers: Iterable[LayerSpec]) -> NetworkIR:
+    """Build a chain ``NetworkIR`` from an iterable of layers."""
     return NetworkIR(name, tuple(layers))
 
 
@@ -515,10 +533,12 @@ class GraphIR:
 
     @property
     def n_nodes(self) -> int:
+        """Node count (alias of ``len(graph)``)."""
         return len(self.nodes)
 
     @property
     def n_edges(self) -> int:
+        """Edge count — the grouping space is the 2^n_edges cut vectors."""
         return len(self.edges)
 
     @property
@@ -530,10 +550,12 @@ class GraphIR:
 
     @property
     def total_macs(self) -> int:
+        """Graph-total MAC count."""
         return sum(n.macs for n in self.nodes)
 
     @property
     def total_weight_words(self) -> int:
+        """Graph-total weight words (read once per inference, Eq. (1))."""
         return sum(n.weight_words for n in self.nodes)
 
     # ---- numpy views for the metric kernels --------------------------------
@@ -552,6 +574,7 @@ class GraphIR:
 
     @property
     def in_degree(self) -> np.ndarray:
+        """(L,) incoming-edge count per node."""
         deg = np.zeros(len(self.nodes), dtype=np.int64)
         for e in self.edges:
             deg[e.dst] += 1
@@ -559,6 +582,7 @@ class GraphIR:
 
     @property
     def out_degree(self) -> np.ndarray:
+        """(L,) outgoing-edge count per node."""
         deg = np.zeros(len(self.nodes), dtype=np.int64)
         for e in self.edges:
             deg[e.src] += 1
@@ -566,16 +590,20 @@ class GraphIR:
 
     @property
     def source_mask(self) -> np.ndarray:
+        """(L,) bool — nodes reading their input frame from DRAM."""
         return self.in_degree == 0
 
     @property
     def sink_mask(self) -> np.ndarray:
+        """(L,) bool — nodes whose output always writes to DRAM."""
         return self.out_degree == 0
 
     def successors(self, i: int) -> list[int]:
+        """Consumer node ids of node ``i``."""
         return [e.dst for e in self.edges if e.src == i]
 
     def predecessors(self, i: int) -> list[int]:
+        """Producer node ids of node ``i``."""
         return [e.src for e in self.edges if e.dst == i]
 
     def pool_boundary_cuts(self) -> np.ndarray:
@@ -593,6 +621,7 @@ class GraphIR:
         return _repair_partition_cuts(len(self.nodes), self.edges, cuts)
 
     def describe(self) -> str:
+        """Multi-line dump: one row per node with its producer ids."""
         lines = [f"graph {self.name}: {len(self.nodes)} nodes, {len(self.edges)} edges"]
         for i, n in enumerate(self.nodes):
             preds = self.predecessors(i)
@@ -642,10 +671,12 @@ class PaddedGraph:
 
     @property
     def n_nodes_padded(self) -> int:
+        """Bucket node count L_pad (>= n_nodes)."""
         return self.feat.shape[0]
 
     @property
     def n_edges_padded(self) -> int:
+        """Bucket edge count E_pad (>= n_edges)."""
         return self.esrc.shape[0]
 
 

@@ -218,7 +218,9 @@ def buffer_words_ref(
     (one per uncut edge); its OF SRAM must hold the **pre-pool** output
     frame whenever any consumer is fused with it — the inline pool unit
     (Fig. 1) reduces the frame only on the DRAM write-out path, so a fused
-    consumer sees the full pre-pool intermediate.  Weight SRAM holds the
+    consumer sees the full pre-pool intermediate.  A recurrent node's
+    ``state_words`` carry lives in IF SRAM for its whole execution, on top
+    of whatever input it streams, in every grouping.  Weight SRAM holds the
     largest single layer's kernels.
     """
     g = as_graph(ir)
@@ -232,6 +234,7 @@ def buffer_words_ref(
             internal_out[e.src] = True
     for i, n in enumerate(g.nodes):
         src = internal_in[i] if internal_in[i] > 0 else STAGING_WORDS
+        src += float(n.state_words)
         dst = float(n.out_words_prepool) if internal_out[i] else STAGING_WORDS
         if_need = max(if_need, src)
         of_need = max(of_need, dst)
@@ -247,12 +250,15 @@ def area_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Metrics:
+    """The paper's four scores for one (graph, grouping, hw) candidate."""
+
     bandwidth_words: float
     latency_cycles: float
     energy_nj: float
     area_um2: float
 
     def meets(self, c) -> bool:
+        """All four metrics within the :class:`Constraints` bounds."""
         return (
             self.bandwidth_words <= c.max_bandwidth_words
             and self.latency_cycles <= c.max_latency_cycles
@@ -262,6 +268,7 @@ class Metrics:
 
 
 def evaluate_ref(ir: NetworkIR | GraphIR, cuts: np.ndarray, hw: DLAConfig) -> Metrics:
+    """Scalar-oracle Eq. (1)-(4) for one candidate (the lock-step ref)."""
     return Metrics(
         bandwidth_words=bandwidth_ref(ir, cuts),
         latency_cycles=latency_ref(ir, cuts, hw),
@@ -358,6 +365,7 @@ class PrefixCostTables:
     prepool_words: np.ndarray  # (L,) on-chip pre-pool frame words
     sink_charge: np.ndarray  # (L,) out_words where sink else 0.0
     const_words: float  # sources + ext reads (Eq. (1) minus weights)
+    state_words: np.ndarray  # (L,) recurrent carry held in SRAM per node
 
 
 def graph_prefix_tables(g: GraphIR) -> PrefixCostTables:
@@ -378,6 +386,7 @@ def graph_prefix_tables(g: GraphIR) -> PrefixCostTables:
         prepool_words=ga.feat[:, F_OUT_PRE].copy(),
         sink_charge=np.where(ga.sink_mask, ga.feat[:, F_OUT], 0.0),
         const_words=ga.base_bw - float(ga.feat[:, F_W].sum()),
+        state_words=ga.feat[:, F_STATE].copy(),
     )
     object.__setattr__(g, "_prefix_tables", pt)
     return pt
@@ -402,7 +411,7 @@ def bandwidth_batch_graph(
 
 # Feature column indices (must match NetworkIR.FEATURES order).
 (F_W, F_IN, F_OUT, F_OUT_PRE, F_MACS, F_ISPOOL, F_KH, F_KW, F_NIN, F_NOUT,
- F_PIX, F_EXT) = range(12)
+ F_PIX, F_EXT, F_STATE) = range(13)
 # HW row indices (must match DLAConfig.ROW_FIELDS order).
 (H_F1, H_F2, H_F3, H_F4, H_MPP, H_DWPC, H_TPL, H_EDRAM, H_ESRAM, H_EPB,
  H_PEU) = range(11)
@@ -508,7 +517,10 @@ def _evaluate_one_graph(
         jnp.zeros(L, feat.dtype).at[esrc].max(internal_real.astype(feat.dtype))
         > 0.5
     )
-    src_need = jnp.where(internal_in > 0, internal_in, STAGING_WORDS)
+    src_need = (
+        jnp.where(internal_in > 0, internal_in, STAGING_WORDS)
+        + feat[:, F_STATE]
+    )
     dst_need = jnp.where(any_out_internal, feat[:, F_OUT_PRE], STAGING_WORDS)
     if_need = jnp.maximum(jnp.max(src_need), STAGING_WORDS)
     of_need = jnp.maximum(jnp.max(dst_need), STAGING_WORDS)
@@ -811,6 +823,7 @@ def evaluate_batch(
 
 
 def area_consts_of(hw: DLAConfig) -> np.ndarray:
+    """The per-config area-calibration constants as a feature row."""
     return np.asarray(
         [
             hw.area_per_mult_um2,

@@ -66,6 +66,9 @@ def _block_bandwidths(
 
 @dataclasses.dataclass(frozen=True)
 class FusionPlan:
+    """Kernel tile/block choices for one (arch, seq_len) plus the
+    evaluator's fused-vs-layer-by-layer bandwidth verdict."""
+
     arch: str
     seq_len: int
     # attention
@@ -92,9 +95,11 @@ class FusionPlan:
 
     @property
     def bw_saving(self) -> float:
+        """Fractional DRAM-traffic reduction of fused over lbl."""
         return 1.0 - self.bw_fused_words / max(self.bw_lbl_words, 1.0)
 
     def describe(self) -> str:
+        """One-line tiling + bandwidth-saving summary."""
         return (
             f"{self.arch}@{self.seq_len}: flash({self.attn_block_q}x"
             f"{self.attn_block_k}, {self.attn_vmem_bytes/2**20:.1f}MiB) "
@@ -139,6 +144,7 @@ def _plan_mlp(d: int, ff: int, spec: TPUSpec):
 
 
 def plan_model(cfg, seq_len: int, spec: TPUSpec = TPU_V5E) -> FusionPlan:
+    """Plan kernel tilings for one config and score fused vs lbl traffic."""
     hd = cfg.resolved_head_dim
     bq, bk, attn_b = _plan_attention(hd, seq_len, spec)
     bm, bf, mlp_b = _plan_mlp(cfg.d_model, max(cfg.d_ff, cfg.d_model), spec)

@@ -42,6 +42,7 @@ _OP_RE = re.compile(
 
 
 def shape_bytes(shape_text: str) -> int:
+    """Bytes of an HLO shape string (sum over tuple elements)."""
     total = 0
     for dtype, dims in _SHAPE_RE.findall(shape_text):
         if dtype not in DTYPE_BYTES:
@@ -76,6 +77,8 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
 
 @dataclasses.dataclass(frozen=True)
 class Roofline:
+    """Per-device roofline decomposition of one compiled step."""
+
     flops: float  # per-device HLO FLOPs
     hbm_bytes: float  # per-device bytes, TPU-fusion-optimistic (primary)
     coll_bytes: float  # per-device collective bytes
@@ -89,6 +92,7 @@ class Roofline:
 
     @property
     def bound(self) -> str:
+        """Which resource dominates: compute / memory / collective."""
         terms = {
             "compute": self.compute_s,
             "memory": self.memory_s,
@@ -103,6 +107,7 @@ class Roofline:
 
     @property
     def useful_flops_ratio(self) -> float:
+        """Model FLOPs over total executed HLO FLOPs."""
         return self.model_flops_per_device / max(self.flops, 1.0)
 
     @property
@@ -112,6 +117,7 @@ class Roofline:
         return self.model_flops_per_device / max(self.step_seconds, 1e-30) / peak
 
     def row(self) -> dict:
+        """Flat dict row for the benchmark CSV/JSON writers."""
         return {
             "flops": self.flops,
             "hbm_bytes": self.hbm_bytes,

@@ -132,6 +132,7 @@ class PlanResponse:
 
     @property
     def error_type(self) -> str:
+        """Class name of the typed rejection, "" on success."""
         return type(self.error).__name__ if self.error is not None else ""
 
 
@@ -191,6 +192,9 @@ class PlanningService:
         faults=None,
         clock: Callable[[], float] = time.monotonic,
     ):
+        """Service-wide defaults: design space, constraints, queue/batch/
+        cache bounds, retry policy, fault hooks, and the clock (injectable
+        for deterministic tests)."""
         self.config_space = tuple(
             config_space if config_space is not None else default_config_space()
         )
@@ -229,7 +233,25 @@ class PlanningService:
         """Validate and enqueue one request; returns its request id.
 
         Invalid requests are *answered*, not raised: the typed rejection
-        is recorded immediately and the id returned as usual."""
+        is recorded immediately and the id returned as usual.  Past the
+        queue-depth bound the answer is a ``ServiceOverloaded`` rejection;
+        a plan-cache hit is answered immediately without queueing.
+
+        Example — enqueue a batch, then process it with :meth:`tick`::
+
+            >>> from repro.core.service import PlanningService, PlanRequest
+            >>> from repro.core.ir import residual_block_ir
+            >>> svc = PlanningService()
+            >>> rids = [svc.submit(PlanRequest(graph=residual_block_ir(),
+            ...                                sram_budget_words=2e6))
+            ...         for _ in range(3)]
+            >>> svc.queue_depth
+            3
+            >>> svc.tick()
+            3
+            >>> svc.collect(rids[0]).ok
+            True
+        """
         rid = self._next_id
         self._next_id += 1
         self._counters["submitted"] += 1
@@ -363,6 +385,7 @@ class PlanningService:
         self._plan_cache[key] = resp
 
     def plan_cache_stats(self) -> dict:
+        """Plan-cache accounting: hits/misses/evictions + current size."""
         return dict(self._cache_stats, size=len(self._plan_cache))
 
     # ------------------------------------------------------------------
@@ -531,7 +554,32 @@ class PlanningService:
     def tick(self) -> int:
         """Process one micro-batch; returns how many responses were
         produced.  Never raises for a request's failure — every outcome
-        becomes a typed response."""
+        becomes a typed response.
+
+        One tick dequeues up to ``max_batch`` admitted requests, resolves
+        each one's grouping through the deadline ladder, groups the
+        resolutions by (budget, constraints, config space), and answers
+        each group with ONE coalesced :func:`repro.core.flow.run_fleet`
+        program (per-graph explicit cut batches through the shared shape
+        buckets).  Deadlines that expire mid-tick become
+        ``DeadlineExceeded`` responses; transient sweep failures retry
+        with backoff before a ``TransientFailure`` verdict.
+
+        Example — an event loop calling tick until a request resolves::
+
+            >>> from repro.core.service import PlanningService, PlanRequest
+            >>> from repro.core.ir import resnet18_ir
+            >>> svc = PlanningService()
+            >>> rid = svc.submit(PlanRequest(graph=resnet18_ir(),
+            ...                              deadline_seconds=0.5))
+            >>> resp = None
+            >>> while resp is None:          # doctest: +SKIP
+            ...     _ = svc.tick()
+            ...     resp = svc.collect(rid)  # pops once answered
+
+        (Offline callers can use :meth:`plan` — submit + drain + collect
+        in one call — instead of running the loop themselves.)
+        """
         self._ticks += 1
         if self.faults is not None and hasattr(self.faults, "on_tick"):
             self.faults.on_tick(self._ticks)
@@ -600,6 +648,7 @@ class PlanningService:
 
     @property
     def queue_depth(self) -> int:
+        """Requests admitted but not yet answered by a tick."""
         return len(self._queue)
 
     def stats(self) -> dict:

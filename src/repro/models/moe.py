@@ -49,6 +49,14 @@ def init_moe(key, cfg, dtype) -> dict:
     return p
 
 
+def moe_param_specs(cfg, *, dtype=jnp.float32):
+    """``jax.ShapeDtypeStruct`` tree matching :func:`init_moe` (via
+    ``jax.eval_shape`` — nothing materialised; the evaluator's trace hook)."""
+    return jax.eval_shape(
+        lambda k: init_moe(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+
+
 def _capacity(cfg, group_size: int) -> int:
     c = math.ceil(cfg.top_k * group_size / cfg.n_experts * cfg.capacity_factor)
     return max(c, 1)

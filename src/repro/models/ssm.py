@@ -49,6 +49,14 @@ def init_mamba(key, cfg, dtype) -> dict:
     }
 
 
+def mamba_param_specs(cfg, *, dtype=jnp.float32):
+    """``jax.ShapeDtypeStruct`` tree matching :func:`init_mamba` (via
+    ``jax.eval_shape`` — nothing materialised; the evaluator's trace hook)."""
+    return jax.eval_shape(
+        lambda k: init_mamba(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+
+
 def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                           state: jnp.ndarray | None = None):
     """x: (B, S, di); w: (dc, di).  Returns (y, new_state (B, dc-1, di))."""

@@ -143,7 +143,8 @@ def init_cache(cfg, batch: int, max_seq: int, n_layers: int | None = None,
 # ---------------------------------------------------------------------------
 
 
-def _sublayer(sub, x, cfg, rc, mixer, is_moe, positions, cache, cache_len, aux):
+def _sublayer(sub, x, cfg, rc, mixer, is_moe, positions, cache, cache_len, aux,
+              attn_impl: str = "chunked"):
     """One (mixer + FFN) sublayer.  Returns (x, new_cache, aux)."""
     h = L.rmsnorm(sub["norm1"], x, cfg.rmsnorm_eps)
     new_cache = None
@@ -159,7 +160,7 @@ def _sublayer(sub, x, cfg, rc, mixer, is_moe, positions, cache, cache_len, aux):
         out, nc = L.attention_block(
             sub["attn"], h, cfg,
             mixer=mixer, positions=positions, cache=attn_cache,
-            impl="chunked", kv_block=rc.attn_chunk_kv, seq_sharded=rc.seq_shard,
+            impl=attn_impl, kv_block=rc.attn_chunk_kv, seq_sharded=rc.seq_shard,
             ring=(rc.local_ring_cache and mixer == "attn_local"),
             flash_vjp=rc.flash_vjp, bf16_tiles=rc.attn_bf16_tiles,
         )
@@ -175,6 +176,47 @@ def _sublayer(sub, x, cfg, rc, mixer, is_moe, positions, cache, cache_len, aux):
     else:
         out = L.mlp_block(sub["mlp"], h, cfg.ffn_act)
     return x + out, new_cache, aux
+
+
+def block_forward(params, x, cfg, kinds, *, rc=None, attn_impl="chunked"):
+    """Python-loop sublayer stack — the evaluator's tracing hook.
+
+    ``run_segment`` scans ``lax.scan`` over *stacked* layer parameters,
+    which a jaxpr-level consumer would misread as a recurrence; this
+    variant loops the same :func:`_sublayer` bodies in Python over a list
+    of per-sublayer param trees (``kinds`` as from
+    ``cfg.sublayer_kinds``), no cache, positions built in-closure.
+    ``attn_impl="reference"`` keeps attention scan-free so only the SSM's
+    selective scan traces as a recurrent node."""
+    if rc is None:
+        from ..configs.base import RunConfig
+
+        rc = RunConfig()
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.float32(0.0)
+    for sub, (mixer, is_moe) in zip(params, kinds):
+        x, _, aux = _sublayer(
+            sub, x, cfg, rc, mixer, is_moe, positions, None, None, aux,
+            attn_impl=attn_impl,
+        )
+    return x
+
+
+def sublayer_param_specs(cfg, kinds=None, *, dtype=jnp.float32):
+    """``jax.ShapeDtypeStruct`` trees for :func:`block_forward` — one per
+    sublayer, shaped by ``jax.eval_shape`` over the real initialiser (no
+    weights are materialised; granite-34B costs nothing to spec)."""
+    if kinds is None:
+        kinds = cfg.sublayer_kinds(0, cfg.pattern_period)
+
+    def init(key):
+        ks = jax.random.split(key, max(len(kinds), 1))
+        return [
+            _init_sublayer(k, cfg, m, e, dtype)
+            for k, (m, e) in zip(ks, kinds)
+        ]
+
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
 
 
 def _remat_wrap(fn, rc):

@@ -1,0 +1,106 @@
+"""docs/OP_COVERAGE.md is a tested contract, not prose: the primitive
+matrix must match the frontend's actual ``eqn_*`` handlers, the real
+dispatcher, and the real kind vocabulary — so the docs cannot silently rot
+when a lowering rule is added or renamed."""
+from __future__ import annotations
+
+import pathlib
+import re
+
+from repro.core import frontend, ir, metrics
+
+DOC = pathlib.Path(__file__).resolve().parents[1] / "docs" / "OP_COVERAGE.md"
+
+
+def _matrix_rows() -> list[list[str]]:
+    """Cells of every body row of the '## Primitive matrix' table."""
+    text = DOC.read_text()
+    section = text.split("## Primitive matrix", 1)[1].split("\n## ", 1)[0]
+    rows = []
+    for line in section.splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if cells[0].startswith("JAX primitive") or set(cells[0]) <= {"-", " "}:
+            continue  # header / separator
+        rows.append(cells)
+    assert rows, "primitive matrix table not found in docs/OP_COVERAGE.md"
+    assert all(len(r) == 7 for r in rows), [len(r) for r in rows]
+    return rows
+
+
+def _ticked(cell: str) -> set[str]:
+    return set(re.findall(r"`([^`]+)`", cell))
+
+
+def test_matrix_handlers_match_tracer() -> None:
+    documented = set()
+    for row in _matrix_rows():
+        documented |= _ticked(row[1])
+    actual = {m for m in dir(frontend._Tracer) if m.startswith("eqn_")}
+    assert documented == actual, (
+        f"docs list handlers {sorted(documented)} but _Tracer defines "
+        f"{sorted(actual)}"
+    )
+
+
+def test_matrix_primitives_match_dispatcher() -> None:
+    dispatched = (
+        {"conv_general_dilated", "dot_general", "scan"}
+        | set(frontend._REDUCE_WINDOW_PRIMS)
+        | set(frontend._SPATIAL_REDUCE_PRIMS)
+    )
+    documented = set()
+    for row in _matrix_rows():
+        # The primitive cell may carry qualifiers ("(weight operand)");
+        # only the backticked names are primitive claims.
+        documented |= {
+            p.split(" ")[0] for p in _ticked(row[0]) if not p.startswith("(")
+        }
+    # Every special-cased primitive is documented, and the docs name no
+    # primitive the dispatcher does not special-case.
+    assert documented == dispatched, (
+        f"docs: {sorted(documented)} vs dispatcher: {sorted(dispatched)}"
+    )
+
+
+def test_matrix_kinds_are_real_and_complete() -> None:
+    documented = set()
+    for row in _matrix_rows():
+        documented |= _ticked(row[3])
+    assert documented <= set(ir.KINDS), documented - set(ir.KINDS)
+    assert documented == set(ir.KINDS), (
+        f"kinds missing from the matrix: {set(ir.KINDS) - documented}"
+    )
+
+
+def test_matrix_support_columns_are_total() -> None:
+    # The lock-step tests make support all-or-nothing per kind; the matrix
+    # must not claim a partial row that the evaluator cannot distinguish.
+    for row in _matrix_rows():
+        assert [row[4], row[5], row[6]] == ["yes", "yes", "yes"], row
+
+
+def test_cost_model_notes_claims() -> None:
+    text = DOC.read_text()
+    # "13th feature column (metrics.F_STATE)"
+    assert "F_STATE" in text
+    cols = [getattr(metrics, n) for n in dir(metrics) if n.startswith("F_")]
+    assert metrics.F_STATE == max(cols) == 12
+    # The builders named in the doc must exist on the frontend.
+    for fn in ("transformer_graph", "mamba_graph", "moe_block_graph",
+               "vgg16_network", "resnet18_graph", "mobilenet_graph",
+               "mlp_block_graph"):
+        assert f"`frontend.{fn}`" in text or fn in text
+        assert hasattr(frontend, fn), fn
+
+
+def test_architecture_doc_names_real_paths() -> None:
+    arch = DOC.with_name("ARCHITECTURE.md").read_text()
+    root = DOC.parents[1]
+    for rel in ("benchmarks/bench_search.py", "benchmarks/bench_fleet.py",
+                "benchmarks/bench_shard.py", "benchmarks/bench_serve.py",
+                "benchmarks/bench_zoo.py", "docs/OP_COVERAGE.md"):
+        assert rel.rsplit("/", 1)[-1] in arch, rel
+        assert (root / rel).exists(), rel

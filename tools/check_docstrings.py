@@ -1,0 +1,120 @@
+"""pydocstyle-lite: enforce the D1xx docstring subset over a package.
+
+The container has no ruff/pydocstyle, so this is the checked-in
+equivalent of ``ruff --select D1`` restricted to what the repo actually
+promises: every public module, class, function, and method under the
+target directories carries a non-empty docstring whose first line is not
+blank.  "Public" means the name (and every enclosing class) does not
+start with ``_``; dunder methods other than ``__init__`` are exempt, and
+so are ``@overload`` stubs.  Trivial ``@property`` forwarders are NOT
+exempt — a property is API surface like any other.
+
+Usage::
+
+    python tools/check_docstrings.py [dir ...]   # default: src/repro/core
+
+Exit status 1 lists every violation as ``path:line CODE qualname``.
+CI runs this in the required core lane (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEFAULT_TARGETS = ("src/repro/core",)
+
+CODES = {
+    "D100": "missing module docstring",
+    "D101": "missing class docstring",
+    "D102": "missing method docstring",
+    "D103": "missing function docstring",
+    "D419": "docstring is empty or starts with a blank line",
+}
+
+
+def _docstring_ok(node) -> str | None:
+    """Return a violation code for ``node``'s docstring, or None."""
+    doc = ast.get_docstring(node, clean=False)
+    if doc is None:
+        if isinstance(node, ast.Module):
+            return "D100"
+        if isinstance(node, ast.ClassDef):
+            return "D101"
+        return "D103"
+    if not doc.strip() or not doc.splitlines()[0].strip():
+        return "D419"
+    return None
+
+
+def _is_public(name: str) -> bool:
+    if name.startswith("__") and name.endswith("__"):
+        return name == "__init__"
+    return not name.startswith("_")
+
+
+def _is_overload(node) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else getattr(
+            target, "id", None
+        )
+        if name == "overload":
+            return True
+    return False
+
+
+def check_file(path: pathlib.Path) -> list[tuple[int, str, str]]:
+    """All (line, code, qualname) violations in one source file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out: list[tuple[int, str, str]] = []
+    code = _docstring_ok(tree)
+    if code:
+        out.append((1, code, "<module>"))
+
+    def walk(node, prefix: str, in_class: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if not _is_public(child.name) or _is_overload(child):
+                    continue
+                qual = f"{prefix}{child.name}"
+                code = _docstring_ok(child)
+                if code:
+                    code = "D102" if in_class and code == "D103" else code
+                    out.append((child.lineno, code, qual))
+                # Nested defs are private implementation detail: skip.
+            elif isinstance(child, ast.ClassDef):
+                if not _is_public(child.name):
+                    continue
+                qual = f"{prefix}{child.name}"
+                code = _docstring_ok(child)
+                if code:
+                    out.append((child.lineno, code, qual))
+                walk(child, f"{qual}.", True)
+
+    walk(tree, "", False)
+    return out
+
+
+def main(argv: list[str]) -> int:
+    targets = argv or list(DEFAULT_TARGETS)
+    root = pathlib.Path(__file__).resolve().parents[1]
+    violations = 0
+    n_files = 0
+    for target in targets:
+        base = root / target
+        for path in sorted(base.rglob("*.py")):
+            n_files += 1
+            for line, code, qual in check_file(path):
+                violations += 1
+                rel = path.relative_to(root)
+                print(f"{rel}:{line} {code} {qual} ({CODES[code]})")
+    if violations:
+        print(f"\n{violations} docstring violation(s) in {n_files} file(s)")
+        return 1
+    print(f"docstrings OK: {n_files} file(s) in {', '.join(targets)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
