@@ -1,7 +1,18 @@
-"""Batched serving example: prefill + autoregressive decode with KV/SSM
-caches, comparing a full-context cache against the window-sized ring cache
-for a local-attention (gemma3-family) model — the paper's fusion idea
-("only the group's edges touch DRAM") applied to the serving cache.
+"""Async planning service demo: serve LM-workload planning requests,
+cancel one mid-flight, and drain safely on Ctrl-C.
+
+Real LM graphs (a gemma3-family decoder superblock traced from the model
+code, plus a transformer MLP block) are submitted as futures to
+:class:`repro.core.service.AsyncPlanningService`.  The sweep runs in
+resumable ``hw_chunk`` slices, so a cancellation landing while the fleet
+program is running is honoured at the next chunk boundary — demonstrated
+here with a deliberately stalled sweep (the same duck-typed fault-hook
+idiom the chaos tests use).
+
+The whole session lives inside the service's context manager: a Ctrl-C
+(KeyboardInterrupt) unwinds through ``__exit__``, which still drains the
+queue — every accepted future resolves with a typed response before the
+process exits, and nothing is left half-answered.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,57 +21,87 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import dataclasses
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import resolve, run_config, scaled_down
-from repro.models import model as M
+from repro.configs import resolve, scaled_down
+from repro.core import frontend
+from repro.core.arch import paper_config_space
+from repro.core.service import AsyncPlanningService, PlanRequest
 
 
-def cache_bytes(cache):
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+class SlowChunks:
+    """Stretch each sweep chunk so the mid-flight cancel is observable.
+
+    Any object with the right method names works as a service fault hook
+    (the duck-typed idiom of repro.runtime.fault_tolerance); a real
+    deployment would simply omit it.
+    """
+
+    def __init__(self, stall_seconds: float = 0.05):
+        self.stall_seconds = stall_seconds
+        self.chunks = 0
+
+    def before_chunk(self) -> None:
+        self.chunks += 1
+        time.sleep(self.stall_seconds)
 
 
 def main():
     cfg = scaled_down(resolve("gemma3"), window_size=16, max_seq_len=96)
-    rc = run_config(cfg.name, "decode_32k")
-    rc = dataclasses.replace(rc, attn_chunk_kv=32, xent_chunk=32)
-    rc_ring = dataclasses.replace(rc, local_ring_cache=True)
+    superblock = frontend.transformer_graph(cfg, seq_len=64, n_sublayers=2)
+    mlp = frontend.mlp_block_graph(d_model=256, d_ff=1024, seq_len=64)
 
-    params = M.init_params(jax.random.key(0), cfg)
-    B, prompt, gen = 4, 32, 24
-    key = jax.random.key(1)
-    batch = {"tokens": jax.random.randint(key, (B, prompt), 0, cfg.vocab_size)}
+    hook = SlowChunks()
+    with tempfile.TemporaryDirectory() as journal_dir, AsyncPlanningService(
+        config_space=paper_config_space(),
+        hw_chunk=2,  # sweep in resumable hardware-axis chunks
+        journal_dir=journal_dir,  # WAL: every answer durable before publish
+        backoff_seconds=0.0,
+        faults=hook,
+    ) as svc:
+        # A request we will cancel mid-sweep, then the real workload.
+        doomed = svc.submit(PlanRequest(graph=superblock))
+        served = [
+            svc.submit(PlanRequest(graph=g, sram_budget_words=budget))
+            for g, budget in [(superblock, 2e6), (mlp, float("inf")),
+                              (mlp, 1e6)]
+        ]
 
-    results = {}
-    for name, rc_i, ring in (("full-cache", rc, False), ("ring-cache", rc_ring, True)):
-        cache = M.init_cache(cfg, B, prompt + gen + 8, ring=ring)
-        cb = cache_bytes(cache)
-        prefill = jax.jit(lambda p, c, b: M.prefill(p, cfg, rc_i, b, c),
-                          donate_argnums=(1,))
-        decode = jax.jit(lambda p, c, t: M.decode(p, cfg, rc_i, t, c),
-                         donate_argnums=(1,))
-        logits, cache = prefill(params, cache, batch)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        toks = [np.asarray(tok)]
+        # Wait until the doomed request's chunked sweep is provably
+        # running, then cancel: the program stops at the next chunk
+        # boundary — never mid-kernel, never a silently wasted sweep.
         t0 = time.perf_counter()
-        for _ in range(gen - 1):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits[:, -1], -1)[:, None]
-            toks.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        dt = (time.perf_counter() - t0) / (gen - 1) * 1e3
-        results[name] = np.concatenate(toks, axis=1)
-        print(f"[serve_lm] {name:10s}: cache {cb/2**10:8.1f} KiB, "
-              f"{dt:6.1f} ms/token, sample {results[name][0][:8].tolist()}")
+        while hook.chunks == 0:
+            if time.perf_counter() - t0 > 60:
+                raise SystemExit("sweep never started")
+            time.sleep(1e-3)
+        svc.cancel(doomed)
+        resp = doomed.result(timeout=300)
+        print(f"[serve_lm] cancelled mid-flight after {hook.chunks} chunks "
+              f"-> {resp.error_type} "
+              f"({(time.perf_counter() - t0) * 1e3:.0f} ms)")
+        assert resp.error_type == "RequestCancelled"
 
-    same = np.array_equal(results["full-cache"], results["ring-cache"])
-    print(f"[serve_lm] ring-cache generations identical to full-cache: {same}")
-    assert same
+        # Everything else resolves normally (a Ctrl-C here would unwind
+        # through __exit__, which drains first — same guarantee).
+        for fut in served:
+            r = fut.result(timeout=300)
+            assert r.ok, r.error_type
+            hw = r.plan.best_hw
+            print(f"[serve_lm] {r.plan.best_cuts.shape[0]:2d}-edge "
+                  f"{'degraded' if r.degraded else 'exact':8s} plan "
+                  f"via {r.engine:11s}: "
+                  f"({hw.style} {hw.f1},{hw.f2},{hw.f3},{hw.f4})  "
+                  f"energy {r.plan.best_metrics.energy_nj / 1e6:8.3f} mJ  "
+                  f"latency {r.latency_seconds * 1e3:7.1f} ms")
+
+        stats = svc.stats()
+        print(f"[serve_lm] served {stats['counters']['completed']}, "
+              f"cancelled {stats['counters']['cancelled_in_sweep']} "
+              f"mid-sweep, {stats['ticks']} ticks, "
+              f"journal_seq {stats['journal_seq']}")
+    print("[serve_lm] drained shutdown: every accepted future resolved")
 
 
 if __name__ == "__main__":

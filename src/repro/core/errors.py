@@ -31,6 +31,11 @@ Taxonomy::
     +-- DeadlineExceeded                # request missed its wall-clock deadline
     +-- ServiceOverloaded               # queue-depth bound shed the request
     +-- TransientFailure                # retries exhausted on a transient fault
+    +-- RequestCancelled                # caller cancelled; sweep stopped at a
+    |                                   #   chunk boundary
+    +-- AuditMismatch                   # online shadow audit: served plan
+    |                                   #   diverged from the scalar oracle
+    +-- JournalCorrupt                  # write-ahead log failed verification
 """
 from __future__ import annotations
 
@@ -106,3 +111,25 @@ class TransientFailure(EvaluatorError):
         super().__init__(message)
         self.cause = cause
         self.attempts = int(attempts)
+
+
+class RequestCancelled(EvaluatorError):
+    """The caller cancelled this request.  Cancellation is cooperative: a
+    request still queued is answered immediately; one inside a sweep stops
+    at the next chunk boundary (:func:`repro.core.flow.run_fleet` with
+    ``hw_chunk``), never mid-kernel."""
+
+
+class AuditMismatch(EvaluatorError):
+    """The online shadow audit re-scored a served plan against the scalar
+    oracle (``bandwidth_ref`` et al.) and the metrics diverged — the fast
+    path produced a silently wrong answer, which must fail loudly."""
+
+
+class JournalCorrupt(EvaluatorError, IOError):
+    """The write-ahead log failed verification beyond what crash-recovery
+    tolerates: an interior record with a bad digest, a sequence gap, or a
+    snapshot whose digest does not match.  (A *torn tail* — the final
+    record cut mid-append — is normal crash damage and silently dropped.)
+    Dual-inherits ``IOError`` like the checkpoint layer's corruption
+    verdicts."""

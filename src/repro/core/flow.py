@@ -586,6 +586,8 @@ def run_fleet(
     sram_budget_words: float = float("inf"),
     devices=None,
     pareto: bool = False,
+    hw_chunk: int | None = None,
+    abort_check=None,
 ) -> FleetResult:
     """Sweep many graphs' (hw x grouping) cross-products in ONE XLA program.
 
@@ -646,6 +648,19 @@ def run_fleet(
         >>> r.pareto.metrics.shape[1]            # (bw, latency, energy, area)
         4
 
+    ``hw_chunk`` splits the sweep into resumable slices of the hardware
+    axis: the fleet program runs once per ≤``hw_chunk``-row slice of the
+    config space and the raw (G, h, C, 5) planes are reassembled before
+    metrics composition.  Every raw row is an exact per-candidate f64
+    quantity (energy is composed *outside* XLA), so the chunked sweep is
+    **bit-identical** to the unchunked one — chunking only creates
+    preemption points.  ``abort_check`` (a zero-arg callable) is invoked
+    before each chunk; raising from it abandons the remaining chunks,
+    which is how the planning service implements cooperative cancellation
+    and deadline enforcement at sweep-chunk granularity without ever
+    killing a kernel mid-flight.  ``hw_chunk`` cannot be combined with
+    ``devices`` (the sharded program already splits H across the mesh).
+
     Example — per-graph explicit cut batches (the service/bench form) and
     a sharded hardware axis::
 
@@ -660,6 +675,14 @@ def run_fleet(
     """
     if not irs:
         raise ValueError("empty fleet")
+    if hw_chunk is not None:
+        if devices is not None:
+            raise ValueError(
+                "hw_chunk cannot be combined with devices: the sharded "
+                "program already splits the hardware axis across the mesh"
+            )
+        if hw_chunk <= 0:
+            raise ValueError(f"hw_chunk must be positive, got {hw_chunk}")
     if config_space is None:
         config_space = default_config_space()
     graphs = [as_graph(ir) for ir in irs]
@@ -751,11 +774,36 @@ def run_fleet(
         np.stack([pg.node_mask for pg in padded]),
         np.stack([pg.edge_mask for pg in padded]),
     )
-    exe, compile_seconds = _compiled_sweep(kernel, args, mesh_key=mesh_key)
-    # The sharded path's (G, H_padded, C_b, 5) raw plane arrives here as the
-    # sweep's single cross-device gather; padded hardware rows are sliced
-    # off before energy composition so both paths compose identically.
-    raw, sweep_seconds = _run_sweep(exe, args)
+    if abort_check is not None:
+        abort_check()
+    if hw_chunk is None or hw_chunk >= H:
+        exe, compile_seconds = _compiled_sweep(kernel, args, mesh_key=mesh_key)
+        # The sharded path's (G, H_padded, C_b, 5) raw plane arrives here as
+        # the sweep's single cross-device gather; padded hardware rows are
+        # sliced off before energy composition so both paths compose
+        # identically.
+        raw, sweep_seconds = _run_sweep(exe, args)
+    else:
+        # Resumable chunked sweep: one program per ≤hw_chunk-row slice of
+        # the config space, abort_check between slices.  Raw rows are
+        # per-candidate-exact, so the reassembled plane is bit-identical
+        # to the single-program sweep.
+        compile_seconds = sweep_seconds = 0.0
+        planes = []
+        for h0 in range(0, H, hw_chunk):
+            if abort_check is not None and h0:
+                abort_check()
+            chunk_args = (
+                args[:7] + (hw_rows[h0:h0 + hw_chunk],) + args[8:]
+            )
+            exe, dt_c = _compiled_sweep(
+                kernel, chunk_args, mesh_key=mesh_key
+            )
+            plane, dt_s = _run_sweep(exe, chunk_args)
+            planes.append(plane)
+            compile_seconds += dt_c
+            sweep_seconds += dt_s
+        raw = np.concatenate(planes, axis=1)
     out = M.compose_metrics(raw[:, :H], hw_rows)  # (G, H, C_b, 4)
     n_cand = H * sum(counts)
     fleet_cps = n_cand / max(sweep_seconds, 1e-9)

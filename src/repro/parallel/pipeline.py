@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .sharding import shard_map_unchecked
+
 
 def bubble_fraction(n_micro: int, stages: int) -> float:
     ticks = n_micro + stages - 1
@@ -46,10 +48,9 @@ def pipeline_apply(
     ticks = n_micro + stages - 1
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        shard_map_unchecked, mesh=mesh,
         in_specs=(P(axis), P()),  # params split by stage; data replicated
         out_specs=P(),
-        check_vma=False,
     )
     def run(params, xm):
         stage = jax.lax.axis_index(axis)

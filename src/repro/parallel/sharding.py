@@ -49,6 +49,33 @@ def shard_map_fn():
     return sm
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication/varying-manual-axes checking off,
+    across jax versions: the flag is ``check_vma`` on jax >= 0.6 and
+    ``check_rep`` on 0.4.x.  (The evaluator's uses are all statically
+    replicated, so the check adds nothing but version skew.)"""
+    sm = shard_map_fn()
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+def use_mesh(mesh: Mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    jax >= 0.6 spells it ``jax.set_mesh(mesh)``; on 0.4.x entering the
+    ``Mesh`` itself sets the ambient mesh pjit/shard_map resolve against.
+    Use this instead of either spelling directly (the PR 5
+    ``hint``-resolution fix, promoted to the write side)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def hardware_mesh(devices=None, *, axis: str = HW_AXIS) -> Mesh:
     """A 1-D mesh over ``devices`` for hardware-config sharding.
 
@@ -160,12 +187,23 @@ def _ambient_mesh_auto_axes():
             n for n, t in zip(am.axis_names, am.axis_types)
             if t == AxisType.Auto
         )
+    from jax._src import core as core_lib
     from jax._src import mesh as mesh_lib
 
     pm = mesh_lib.thread_resources.env.physical_mesh
     if pm is None or pm.empty or not pm.axis_names:
         return None, ()
-    return pm, tuple(pm.axis_names)
+    # Inside shard_map the mesh axes are bound in the trace-time axis env —
+    # those are Manual and must not be pinned (0.4.x has no AxisType, so
+    # this is the only way to see them).
+    manual: set = set()
+    get_env = getattr(core_lib, "get_axis_env", None)
+    if get_env is not None:
+        try:
+            manual = set(get_env().axis_sizes)
+        except Exception:  # pragma: no cover - defensive across 0.4.x micros
+            manual = set()
+    return pm, tuple(n for n in pm.axis_names if n not in manual)
 
 
 def hint(x, *spec):

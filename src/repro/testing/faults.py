@@ -139,7 +139,17 @@ class FaultInjector:
                                 tight deadlines trip DeadlineExceeded;
     ``evict_every``           — every k-th tick clears the executable
                                 cache (an eviction storm): plans must be
-                                bit-identical with or without the cache.
+                                bit-identical with or without the cache;
+    ``chunk_stall_seconds``   — every ``before_chunk`` call (the chunked
+                                sweep's between-chunk preemption point)
+                                sleeps, stretching the sweep so the
+                                cancellation tests can land a cancel
+                                mid-flight and measure how fast the next
+                                chunk boundary honours it;
+    ``corrupt_audit_every``   — every k-th shadow audit perturbs the
+                                oracle's energy by +1 nJ (0 = off), so
+                                the AuditMismatch path is exercisable
+                                without a real evaluator bug.
     """
 
     def __init__(
@@ -150,6 +160,8 @@ class FaultInjector:
         stall_every: int = 0,
         stall_seconds: float = 0.0,
         evict_every: int = 0,
+        chunk_stall_seconds: float = 0.0,
+        corrupt_audit_every: int = 0,
         sleep=time.sleep,
     ):
         self.transient_sweeps = int(transient_sweeps)
@@ -157,6 +169,8 @@ class FaultInjector:
         self.stall_every = int(stall_every)
         self.stall_seconds = float(stall_seconds)
         self.evict_every = int(evict_every)
+        self.chunk_stall_seconds = float(chunk_stall_seconds)
+        self.corrupt_audit_every = int(corrupt_audit_every)
         self.sleep = sleep
         self.counts = collections.Counter()
 
@@ -185,6 +199,22 @@ class FaultInjector:
         ):
             self.counts["injected_transients"] += 1
             raise InjectedTransient("injected periodic sweep failure")
+
+    def before_chunk(self) -> None:
+        self.counts["chunks"] += 1
+        if self.chunk_stall_seconds > 0:
+            self.sleep(self.chunk_stall_seconds)
+
+    def corrupt_audit(self, metrics):
+        self.counts["audits_seen"] += 1
+        if self.corrupt_audit_every and (
+            self.counts["audits_seen"] % self.corrupt_audit_every == 0
+        ):
+            self.counts["audits_corrupted"] += 1
+            return dataclasses.replace(
+                metrics, energy_nj=metrics.energy_nj + 1.0
+            )
+        return metrics
 
 
 # ---------------------------------------------------------------------------

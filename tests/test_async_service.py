@@ -1,0 +1,389 @@
+"""Async transport, cooperative cancellation, circuit breaker, shadow
+audit, and affinity batching (PR 9 robustness layer).
+
+What must hold:
+
+* the async transport serves the same bit-identical plans as the
+  synchronous service it wraps, and drains on shutdown so every accepted
+  future resolves — including when unwinding from Ctrl-C;
+* a cancellation landing mid-sweep stops the chunked fleet program within
+  ONE ``hw_chunk`` boundary (asserted via an injected per-chunk stall,
+  counting chunks swept after the cancel);
+* the circuit breaker walks CLOSED -> OPEN (degraded floor plans while
+  open) -> HALF_OPEN probe -> CLOSED, and a failed probe re-opens it;
+* the shadow audit passes clean runs silently (zero mismatches across a
+  chaos stream) and converts an injected oracle divergence into a typed
+  ``AuditMismatch`` answer;
+* the lock-guarded plan cache reports stats in the same shape as
+  ``flow.sweep_cache_stats()``.
+"""
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import flow
+from repro.core.arch import paper_config_space
+from repro.core.service import (
+    AsyncPlanningService,
+    BreakerState,
+    PlanRequest,
+    PlanningService,
+)
+from repro.core.ir import as_graph, residual_block_ir
+from repro.core import frontend
+from repro.testing.faults import FaultInjector, chaos_requests
+
+SPACE = tuple(paper_config_space())
+
+MLP = as_graph(frontend.mlp_block_graph())
+RES = as_graph(residual_block_ir())
+
+
+def _bits(x: float) -> bytes:
+    return struct.pack("<d", float(x))
+
+
+class FakeClock:
+    """Injectable monotonic clock for deterministic breaker timing."""
+
+    def __init__(self, t: float = 1_000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _wait_until(pred, timeout=30.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# async transport
+# ---------------------------------------------------------------------------
+
+
+def test_async_serves_bit_identical_to_sync():
+    req = PlanRequest(graph=RES, sram_budget_words=2e6)
+    sync = PlanningService(config_space=SPACE, backoff_seconds=0.0)
+    want = sync.plan(req)
+    assert want.ok
+    with AsyncPlanningService(
+        config_space=SPACE, backoff_seconds=0.0
+    ) as svc:
+        got = svc.plan(req, timeout=120)
+    assert got.ok and not got.degraded
+    assert got.plan.best_hw == want.plan.best_hw
+    assert np.array_equal(got.plan.best_cuts, want.plan.best_cuts)
+    for f in ("bandwidth_words", "latency_cycles", "energy_nj", "area_um2"):
+        assert _bits(getattr(got.plan.best_metrics, f)) == _bits(
+            getattr(want.plan.best_metrics, f))
+
+
+def test_async_drain_on_shutdown_resolves_every_future():
+    svc = AsyncPlanningService(config_space=SPACE, backoff_seconds=0.0)
+    futs = [
+        svc.submit(PlanRequest(graph=[MLP, RES][i % 2]))
+        for i in range(6)
+    ]
+    svc.shutdown(drain=True, timeout=120)
+    assert all(f.done() for f in futs)
+    assert all(f.result().ok for f in futs)
+    with pytest.raises(RuntimeError):
+        svc.submit(PlanRequest(graph=MLP))
+
+
+def test_async_context_manager_drains_like_ctrl_c():
+    """__exit__ drains even when unwinding from an exception — the
+    KeyboardInterrupt path examples/serve_lm.py relies on."""
+    futs = []
+    with pytest.raises(KeyboardInterrupt):
+        with AsyncPlanningService(
+            config_space=SPACE, backoff_seconds=0.0
+        ) as svc:
+            futs = [svc.submit(PlanRequest(graph=MLP)) for _ in range(3)]
+            raise KeyboardInterrupt
+    assert all(f.done() for f in futs)
+    assert all(f.result().ok for f in futs)
+
+
+def test_async_shutdown_without_drain_cancels_pending():
+    inj = FaultInjector(chunk_stall_seconds=0.05)
+    svc = AsyncPlanningService(
+        config_space=SPACE, backoff_seconds=0.0, hw_chunk=2, faults=inj)
+    # distinct budgets = distinct affinity keys: one request per tick, so
+    # the tail is still queued when the worker reaches the stop branch
+    futs = [
+        svc.submit(PlanRequest(graph=RES, sram_budget_words=b))
+        for b in (float("inf"), 2e6, 1e6)
+    ]
+    assert _wait_until(lambda: inj.counts["chunks"] >= 1)
+    svc.shutdown(drain=False, timeout=120)
+    assert all(f.done() for f in futs)
+    outcomes = {f.result().error_type for f in futs}
+    assert "RequestCancelled" in outcomes  # the still-pending tail
+
+
+def test_async_heartbeat_and_watchdog_observe_a_stalled_sweep(tmp_path):
+    beat = tmp_path / "heartbeat"
+    ages = []
+    inj = FaultInjector(chunk_stall_seconds=0.25)
+    svc = AsyncPlanningService(
+        config_space=SPACE, backoff_seconds=0.0, hw_chunk=2, faults=inj,
+        heartbeat_path=beat, watchdog_seconds=0.05, on_stall=ages.append)
+    try:
+        resp = svc.plan(PlanRequest(graph=MLP), timeout=120)
+        assert resp.ok
+        assert beat.exists() and int(beat.read_text().split()[0]) > 0
+        # the 4-chunk sweep stalled ~1s with no worker heartbeat: the
+        # watchdog must have noticed
+        assert ages and max(ages) > 0.05
+        assert svc.stats()["transport"]["stalls"] >= 1
+    finally:
+        svc.shutdown(drain=True, timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# cooperative cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_request_sync():
+    svc = PlanningService(config_space=SPACE, backoff_seconds=0.0)
+    rid = svc.submit(PlanRequest(graph=MLP))
+    assert svc.cancel(rid) is True
+    assert svc.cancel(10_000) is False  # unknown id
+    svc.drain()
+    resp = svc.collect(rid)
+    assert resp.error_type == "RequestCancelled"
+    # already answered: the (popped) answer stands
+    assert svc.cancel(rid) is False
+
+
+def test_cancel_mid_sweep_stops_within_one_chunk_boundary():
+    """THE acceptance assertion: with an injected per-chunk stall, a
+    cancel landing mid-sweep is honoured at the next ``hw_chunk``
+    boundary — at most one further chunk is swept."""
+    inj = FaultInjector(chunk_stall_seconds=0.15)
+    svc = AsyncPlanningService(
+        config_space=SPACE, backoff_seconds=0.0, hw_chunk=2, faults=inj)
+    try:
+        fut = svc.submit(PlanRequest(graph=RES))
+        # wait until the chunked sweep is provably in flight
+        assert _wait_until(lambda: inj.counts["chunks"] >= 1)
+        chunks_at_cancel = inj.counts["chunks"]
+        t0 = time.monotonic()
+        assert svc.cancel(fut) is True
+        resp = fut.result(timeout=120)
+        cancel_latency = time.monotonic() - t0
+        assert resp.error_type == "RequestCancelled"
+        # the in-progress chunk finishes, the NEXT boundary aborts; +2
+        # absorbs a boundary crossed between reading the counter and
+        # flagging the cancel
+        assert inj.counts["chunks"] <= chunks_at_cancel + 2
+        # 8 configs / hw_chunk=2 = 4 chunks at 0.15s each: honoring the
+        # cancel at a boundary is far cheaper than finishing the sweep
+        assert cancel_latency < 2.0
+        assert svc.stats()["counters"]["cancelled_in_sweep"] == 1
+    finally:
+        svc.shutdown(drain=True, timeout=120)
+
+
+def test_deadline_enforced_at_chunk_boundary():
+    """A deadline expiring mid-sweep is honoured the same way a cancel
+    is: the chunked program stops at the next boundary with a typed
+    DeadlineExceeded, never a silently late answer."""
+    clock = FakeClock()
+    inj = FaultInjector(chunk_stall_seconds=0.0)
+
+    real_before_chunk = inj.before_chunk
+
+    def stall_then_expire():
+        real_before_chunk()
+        if inj.counts["chunks"] == 2:
+            clock.advance(100.0)  # the deadline dies between chunks
+
+    inj.before_chunk = stall_then_expire
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, hw_chunk=2, faults=inj,
+        clock=clock)
+    rid = svc.submit(PlanRequest(graph=RES, deadline_seconds=50.0))
+    svc.drain()
+    resp = svc.collect(rid)
+    assert resp.error_type == "DeadlineExceeded"
+    assert inj.counts["chunks"] == 2  # stopped right at the boundary
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def _breaker_service(inj, clock, **kw):
+    return PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, max_retries=0,
+        breaker_threshold=2, breaker_cooldown_seconds=10.0,
+        faults=inj, clock=clock, **kw)
+
+
+def test_breaker_full_lifecycle():
+    clock = FakeClock()
+    inj = FaultInjector(transient_sweeps=2)
+    svc = _breaker_service(inj, clock)
+    assert svc.breaker_state is BreakerState.CLOSED
+
+    # two consecutive TransientFailure verdicts trip the breaker
+    for _ in range(2):
+        resp = svc.plan(PlanRequest(graph=MLP))
+        assert resp.error_type == "TransientFailure"
+    assert svc.breaker_state is BreakerState.OPEN
+    assert svc.stats()["breaker"] == "open"
+    assert svc.stats()["counters"]["breaker_trips"] == 1
+
+    # while OPEN the ladder is pinned to the lbl floor — and serving that
+    # degraded plan does NOT close the breaker
+    resp = svc.plan(PlanRequest(graph=MLP))
+    assert resp.ok and resp.degraded and resp.rung == "lbl"
+    assert svc.breaker_state is BreakerState.OPEN
+
+    # cooldown elapses: HALF_OPEN probe runs at full quality and closes
+    clock.advance(11.0)
+    resp = svc.plan(PlanRequest(graph=RES))
+    assert resp.ok and not resp.degraded and resp.rung == "exact"
+    assert svc.breaker_state is BreakerState.CLOSED
+    assert svc.stats()["counters"]["breaker_closes"] == 1
+
+
+def test_breaker_failed_probe_reopens():
+    clock = FakeClock()
+    inj = FaultInjector(transient_sweeps=2)
+    svc = _breaker_service(inj, clock)
+    for _ in range(2):
+        svc.plan(PlanRequest(graph=MLP))
+    assert svc.breaker_state is BreakerState.OPEN
+
+    clock.advance(11.0)
+    inj.transient_sweeps = 1  # the probe itself fails
+    resp = svc.plan(PlanRequest(graph=RES))
+    assert resp.error_type == "TransientFailure"
+    assert svc.breaker_state is BreakerState.OPEN
+    assert svc.stats()["counters"]["breaker_trips"] == 2
+
+
+# ---------------------------------------------------------------------------
+# shadow audit
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_audit_clean_run_is_silent():
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, shadow_audit_rate=1.0)
+    resp = svc.plan(PlanRequest(graph=RES, sram_budget_words=2e6))
+    assert resp.ok
+    counters = svc.stats()["counters"]
+    assert counters["audits"] == 1
+    assert counters.get("audit_mismatches", 0) == 0
+
+
+def test_shadow_audit_catches_injected_divergence():
+    inj = FaultInjector(corrupt_audit_every=1)
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, shadow_audit_rate=1.0,
+        faults=inj)
+    resp = svc.plan(PlanRequest(graph=RES, sram_budget_words=2e6))
+    assert not resp.ok and resp.plan is None
+    assert resp.error_type == "AuditMismatch"
+    counters = svc.stats()["counters"]
+    assert counters["audit_mismatches"] == 1
+    assert inj.counts["audits_corrupted"] == 1
+
+
+def test_shadow_audit_zero_mismatches_across_chaos_stream():
+    """Acceptance: an uninjected chaos sweep with audit sampling on
+    produces ZERO AuditMismatch verdicts."""
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, shadow_audit_rate=0.25)
+    rids = [svc.submit(req) for _, req in chaos_requests(24, seed=3)]
+    svc.drain()
+    assert all(svc.collect(rid) is not None for rid in rids)
+    counters = svc.stats()["counters"]
+    assert counters["audits"] >= 1
+    assert counters.get("audit_mismatches", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# affinity batching + plan-cache stats
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_batching_groups_by_key_without_starvation():
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, affinity_batching=True)
+    # interleave two affinity keys (same shape bucket, different budget)
+    rids_a, rids_b = [], []
+    for _ in range(3):
+        rids_a.append(svc.submit(PlanRequest(graph=MLP)))
+        rids_b.append(svc.submit(PlanRequest(graph=MLP,
+                                             sram_budget_words=2e6)))
+    svc.tick()
+    # one tick took the FIFO head's whole key group, left the other queued
+    assert all(svc.collect(r) is not None for r in rids_a)
+    assert all(svc._responses.get(r) is None for r in rids_b)
+    assert svc.queue_depth == 3
+    assert svc.stats()["counters"]["affinity_batched"] == 2
+    svc.tick()  # the other key is the new head: no starvation
+    assert all(svc.collect(r) is not None for r in rids_b)
+
+
+def test_plan_cache_stats_matches_sweep_cache_shape():
+    svc = PlanningService(config_space=SPACE, backoff_seconds=0.0)
+    assert svc.plan(PlanRequest(graph=RES, sram_budget_words=2e6)).ok
+    hit = svc.plan(PlanRequest(graph=RES, sram_budget_words=2e6))
+    assert hit.ok and hit.from_cache
+
+    stats = svc.plan_cache_stats()
+    assert set(stats) == set(flow.sweep_cache_stats())  # shape parity
+    assert stats["size"] == len(stats["entries"]) == 1
+    assert stats["entries"][0]["graph"] == RES.name
+    assert stats["entries"][0]["engine"]
+    assert stats["hits"] == 1 and stats["evictions"] == 0
+
+
+def test_plan_cache_stats_safe_under_concurrent_reads():
+    """The stats reader takes the cache lock: hammer it from a thread
+    while the service mutates the LRU — no exceptions, consistent
+    snapshots throughout (this deadlocked/corrupted before the lock)."""
+    svc = PlanningService(
+        config_space=SPACE, backoff_seconds=0.0, plan_cache_capacity=4)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                s = svc.plan_cache_stats()
+                assert s["size"] == len(s["entries"]) <= 4
+            except Exception as e:  # pragma: no cover - the failure mode
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for i in range(8):
+            svc.plan(PlanRequest(graph=[MLP, RES][i % 2],
+                                 sram_budget_words=float(2**i) * 1e4))
+    finally:
+        stop.set()
+        t.join()
+    assert not errors

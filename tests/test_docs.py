@@ -104,3 +104,87 @@ def test_architecture_doc_names_real_paths() -> None:
                 "benchmarks/bench_zoo.py", "docs/OP_COVERAGE.md"):
         assert rel.rsplit("/", 1)[-1] in arch, rel
         assert (root / rel).exists(), rel
+
+
+# ---------------------------------------------------------------------------
+# docs/SERVICE.md — the serving/journal/breaker contract
+# ---------------------------------------------------------------------------
+
+SERVICE_DOC = DOC.with_name("SERVICE.md")
+
+
+def _table_rows(section_heading: str) -> list[list[str]]:
+    """Body rows of the (single) markdown table under ``section_heading``."""
+    text = SERVICE_DOC.read_text()
+    section = text.split(section_heading, 1)[1].split("\n## ", 1)[0]
+    rows = []
+    for line in section.splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if set(cells[1]) <= {"-", " "}:
+            continue  # separator
+        rows.append(cells)
+    header, body = rows[0], rows[1:]
+    assert body, f"no table under {section_heading!r} in docs/SERVICE.md"
+    return body
+
+
+def test_service_doc_journal_record_table_matches_code() -> None:
+    from repro.core import journal
+
+    documented = [_ticked(row[0]).pop() for row in
+                  _table_rows("## Journal record format")]
+    # exact vocabulary AND order: the doc table is the WAL's contract
+    assert documented == list(journal.RECORD_TYPES), (
+        f"docs table: {documented} vs journal.RECORD_TYPES: "
+        f"{list(journal.RECORD_TYPES)}"
+    )
+
+
+def test_service_doc_breaker_table_matches_enum() -> None:
+    from repro.core import service
+
+    documented = {_ticked(row[0]).pop() for row in
+                  _table_rows("## Circuit breaker")}
+    actual = {s.name for s in service.BreakerState}
+    assert documented == actual, (
+        f"docs table: {sorted(documented)} vs BreakerState: {sorted(actual)}"
+    )
+
+
+def test_service_doc_lifecycle_names_real_states_and_errors() -> None:
+    text = SERVICE_DOC.read_text()
+    for state in ("admitted", "queued", "sweeping", "served", "cancelled",
+                  "recovered", "rejected", "expired"):
+        assert state in text, f"lifecycle state {state!r} missing"
+    from repro.core import errors
+
+    for err in ("GraphValidationError", "ConfigValidationError",
+                "DeadlineExceeded", "ServiceOverloaded", "RequestCancelled",
+                "AuditMismatch", "TransientFailure", "JournalCorrupt"):
+        assert err in text, f"typed error {err!r} missing from the doc"
+        assert hasattr(errors, err), err
+
+
+def test_service_doc_names_real_paths_and_knobs() -> None:
+    text = SERVICE_DOC.read_text()
+    root = SERVICE_DOC.parents[1]
+    for rel in ("tests/test_journal.py", "tests/test_journal_property.py",
+                "tests/test_docs.py", "examples/serve_lm.py",
+                "benchmarks/bench_serve.py"):
+        assert rel in text, rel
+        assert (root / rel).exists(), rel
+    # every knob the doc mentions is a real constructor parameter
+    import inspect
+
+    from repro.core.service import AsyncPlanningService, PlanningService
+
+    params = set(inspect.signature(PlanningService.__init__).parameters)
+    params |= set(inspect.signature(AsyncPlanningService.__init__).parameters)
+    for knob in ("journal_dir", "hw_chunk", "shadow_audit_rate",
+                 "breaker_threshold", "breaker_cooldown_seconds",
+                 "watchdog_seconds"):
+        assert knob in text, knob
+        assert knob in params, knob

@@ -1,0 +1,342 @@
+"""Write-ahead journal + crash recovery: bit-identity at every kill point.
+
+The contract under test (repro.core.journal + PlanningService.recover):
+
+* every codec round-trips bit-exactly (hex floats, raw-byte arrays,
+  graphs, configs, requests, responses — success and error);
+* the WAL tolerates a torn tail (crash mid-append) but refuses interior
+  corruption and sequence gaps with a typed ``JournalCorrupt``;
+* snapshots commit atomically, compact the WAL, and verify by digest;
+* THE crash property: truncate the journal of a completed 50-request run
+  at EVERY record boundary, recover, drain — and the answered set is
+  exactly the durably-admitted set, every response bit-identical to the
+  uninterrupted run's, no duplicates, no losses (degraded/timing fields
+  excluded: they are observations, not answers);
+* recovery composes with itself and honours pre-crash cancellations.
+"""
+import json
+import math
+import pathlib
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import frontend, journal as J
+from repro.core.arch import Constraints, paper_config_space
+from repro.core.errors import (
+    InfeasibleBudgetError,
+    JournalCorrupt,
+    TransientFailure,
+)
+from repro.core.ir import as_graph, residual_block_ir
+from repro.core.service import PlanRequest, PlanningService
+
+# The paper's 8-point space: small sweeps, one shared compiled executable
+# across the whole suite (same space as tests/test_service.py).
+SPACE = tuple(paper_config_space())
+
+
+def _graphs():
+    return [as_graph(frontend.mlp_block_graph()), as_graph(residual_block_ir())]
+
+
+def _service(tmp_path, **kw):
+    kw.setdefault("config_space", SPACE)
+    kw.setdefault("backoff_seconds", 0.0)
+    kw.setdefault("journal_fsync", False)  # replay logic, not disk latency
+    kw.setdefault("snapshot_every", 0)
+    return PlanningService(journal_dir=tmp_path, **kw)
+
+
+def _bits(x: float) -> bytes:
+    return struct.pack("<d", float(x))
+
+
+def assert_responses_equivalent(a, b):
+    """Bit-identical *answers*: everything except per-run timing."""
+    assert a.request_id == b.request_id
+    assert a.ok == b.ok
+    assert a.error_type == b.error_type
+    assert (a.engine, a.rung, a.exact, a.degraded) == (
+        b.engine, b.rung, b.exact, b.degraded)
+    assert _bits(a.quality_bound) == _bits(b.quality_bound)
+    if a.plan is None:
+        assert b.plan is None
+        return
+    pa, pb = a.plan, b.plan
+    assert pa.best_hw == pb.best_hw
+    assert np.array_equal(pa.best_cuts, pb.best_cuts)
+    for f in ("bandwidth_words", "latency_cycles", "energy_nj", "area_um2"):
+        assert _bits(getattr(pa.best_metrics, f)) == _bits(
+            getattr(pb.best_metrics, f))
+    assert pa.group_sizes == pb.group_sizes
+    assert (pa.n_candidates, pa.n_feasible, pa.n_pruned) == (
+        pb.n_candidates, pb.n_feasible, pb.n_pruned)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("x", [
+    0.0, -0.0, 1.5, -3.25e300, 5e-324, float("inf"), float("-inf"),
+    float("nan"), 0.1, 1 / 3,
+])
+def test_float_codec_bit_exact(x):
+    y = J.dec_float(J.enc_float(x))
+    if math.isnan(x):
+        assert math.isnan(y)
+    else:
+        assert _bits(x) == _bits(y)
+
+
+def test_array_codec_bit_exact():
+    rng = np.random.default_rng(0)
+    for a in [
+        rng.standard_normal((3, 5)),
+        np.array([True, False, True]),
+        np.arange(7, dtype=np.int64).reshape(7, 1),
+        np.zeros((0, 4)),
+    ]:
+        b = J.dec_array(J.enc_array(a))
+        assert b.dtype == a.dtype and b.shape == a.shape
+        assert a.tobytes() == b.tobytes()
+
+
+def test_graph_config_constraints_codecs():
+    g = as_graph(residual_block_ir())
+    assert J.dec_graph(J.enc_graph(g)) == g
+    for c in SPACE[:3]:
+        assert J.dec_config(J.enc_config(c)) == c
+    con = Constraints(1.5e6, float("inf"), 2.25e9, float("inf"))
+    assert J.dec_constraints(J.enc_constraints(con)) == con
+
+
+def test_error_codec_keeps_type_and_payload():
+    e = InfeasibleBudgetError("too small", min_feasible_budget_words=4096.0)
+    d = J.dec_error(J.enc_error(e))
+    assert type(d) is InfeasibleBudgetError
+    assert d.min_feasible_budget_words == 4096.0
+    t = J.dec_error(J.enc_error(
+        TransientFailure("gone", cause=RuntimeError("x"), attempts=4)))
+    assert type(t) is TransientFailure and t.attempts == 4
+
+
+# ---------------------------------------------------------------------------
+# WAL mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_wal_append_and_load(tmp_path):
+    j = J.Journal(tmp_path, fsync=False)
+    j.append("admit", {"rid": 0})
+    j.append("tick", {"tick": 1, "rids": [0]})
+    j.append("response", {"rid": 0})
+    j.close()
+    state, recs = J.load(tmp_path)
+    assert state is None
+    assert [r["type"] for r in recs] == ["admit", "tick", "response"]
+    assert [r["seq"] for r in recs] == [1, 2, 3]
+
+
+def test_wal_rejects_unknown_record_type(tmp_path):
+    j = J.Journal(tmp_path, fsync=False)
+    with pytest.raises(ValueError):
+        j.append("frobnicate", {})
+
+
+def test_torn_tail_is_dropped_but_interior_corruption_raises(tmp_path):
+    j = J.Journal(tmp_path, fsync=False)
+    for i in range(4):
+        j.append("admit", {"rid": i})
+    j.close()
+    wal = pathlib.Path(tmp_path) / J.WAL_NAME
+    lines = wal.read_text().splitlines()
+
+    # torn tail: final record cut mid-write -> silently dropped
+    wal.write_text("\n".join(lines[:-1] + [lines[-1][: len(lines[-1]) // 2]]))
+    _, recs = J.load(tmp_path)
+    assert [r["payload"]["rid"] for r in recs] == [0, 1, 2]
+
+    # interior corruption: same damage NOT at the tail -> typed refusal
+    wal.write_text("\n".join(
+        [lines[0], lines[1][: len(lines[1]) // 2], lines[2], lines[3]]))
+    with pytest.raises(JournalCorrupt):
+        J.load(tmp_path)
+
+
+def test_sequence_gap_raises(tmp_path):
+    j = J.Journal(tmp_path, fsync=False)
+    for i in range(3):
+        j.append("admit", {"rid": i})
+    j.close()
+    wal = pathlib.Path(tmp_path) / J.WAL_NAME
+    lines = wal.read_text().splitlines()
+    wal.write_text("\n".join([lines[0], lines[2]]))  # drop the middle record
+    with pytest.raises(JournalCorrupt):
+        J.load(tmp_path)
+
+
+def test_snapshot_compacts_and_verifies(tmp_path):
+    j = J.Journal(tmp_path, fsync=False, snapshot_every=2)
+    j.append("admit", {"rid": 0})
+    assert not j.maybe_snapshot(lambda: {"n": 1})   # 1 < snapshot_every
+    j.append("admit", {"rid": 1})
+    assert j.maybe_snapshot(lambda: {"n": 2})
+    j.append("admit", {"rid": 2})
+    j.close()
+    state, recs = J.load(tmp_path)
+    assert state == {"n": 2}
+    assert [r["payload"]["rid"] for r in recs] == [2]  # WAL compacted
+    assert len(list(pathlib.Path(tmp_path).glob("snapshot_*.json"))) == 1
+
+    snap = next(pathlib.Path(tmp_path).glob("snapshot_*.json"))
+    body = json.loads(snap.read_text())
+    body["state"]["n"] = 999  # bit-rot the snapshot
+    snap.write_text(json.dumps(body))
+    with pytest.raises(JournalCorrupt):
+        J.load(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: every-record-boundary kill points
+# ---------------------------------------------------------------------------
+
+
+def _run_uninterrupted(tmp_path, n=50, **kw):
+    """A journaled n-request run; returns {rid: response} (not popped —
+    read straight from the service's response map)."""
+    svc = _service(tmp_path, **kw)
+    graphs = _graphs()
+    rids = []
+    for i in range(n):
+        rids.append(svc.submit(PlanRequest(
+            graph=graphs[i % len(graphs)],
+            sram_budget_words=[float("inf"), 2e6][(i // 2) % 2],
+        )))
+        if i % 7 == 6:  # interleave ticks so tick records pepper the WAL
+            svc.tick()
+    svc.drain()
+    resps = {rid: svc._responses[rid] for rid in rids}
+    svc.close()
+    return resps
+
+
+def test_recover_at_every_record_boundary_is_exactly_once(tmp_path):
+    """The PR's headline property, exhaustively: kill the service after
+    EVERY WAL record of a 50-request run; recovery + drain must answer
+    exactly the durably-owed set, bit-identically, no duplicates, no
+    losses.  (tests/test_journal_property.py adds the hypothesis-driven
+    arbitrary-byte-offset and interior-corruption variants.)"""
+    base_dir = tmp_path / "base"
+    expected = _run_uninterrupted(base_dir, n=50)
+    wal_lines = (base_dir / J.WAL_NAME).read_text().splitlines()
+    records = [json.loads(line) for line in wal_lines]
+    # every request got exactly one durable response record
+    assert sum(r["type"] == "response" for r in records) == 50
+
+    for cut in range(len(wal_lines) + 1):
+        crash_dir = tmp_path / f"cut{cut}"
+        crash_dir.mkdir()
+        (crash_dir / J.WAL_NAME).write_text(
+            "".join(line + "\n" for line in wal_lines[:cut]))
+
+        prefix = records[:cut]
+        admitted = {r["payload"]["rid"] for r in prefix if r["type"] == "admit"}
+        pre_answered = {
+            r["payload"]["rid"] for r in prefix if r["type"] == "response"
+        }
+        # plan-cache hits answer at submit without queueing, so the durable
+        # obligation is: every admit AND every already-journaled response.
+        owed = admitted | pre_answered
+
+        svc = PlanningService.recover(
+            crash_dir, journal_fsync=False, snapshot_every=0,
+            config_space=SPACE, backoff_seconds=0.0)
+        assert svc.queue_depth == len(admitted - pre_answered)
+        svc.drain()
+
+        got = dict(svc._responses)
+        assert set(got) == owed, f"cut={cut}"  # no loss, no invention
+        for rid in owed:
+            assert_responses_equivalent(expected[rid], got[rid])
+        # replayed (pre-crash) answers are byte-level identical incl timing
+        for rid in pre_answered:
+            assert got[rid].latency_seconds == expected[rid].latency_seconds
+        svc.close()
+
+
+def test_recover_with_snapshots_matches(tmp_path):
+    """Same exactly-once property when snapshots compact the WAL: recover
+    from (snapshot + tail) instead of the full record stream."""
+    base_dir = tmp_path / "snap"
+    expected = _run_uninterrupted(base_dir, n=20, snapshot_every=9)
+    assert list(base_dir.glob("snapshot_*.json"))  # snapshots really exist
+    svc = PlanningService.recover(
+        base_dir, journal_fsync=False, config_space=SPACE,
+        backoff_seconds=0.0)
+    svc.drain()
+    assert set(svc._responses) == set(expected)
+    for rid, resp in expected.items():
+        assert_responses_equivalent(resp, svc._responses[rid])
+    svc.close()
+
+
+def test_recovery_composes_with_itself(tmp_path):
+    """Crash the recovered service too: recover(recover(crash)) still
+    answers exactly once."""
+    d = tmp_path / "j"
+    svc = _service(d)
+    g = _graphs()[0]
+    rids = [svc.submit(PlanRequest(graph=g)) for _ in range(3)]
+    svc.tick()  # answers the batch
+    r4 = svc.submit(PlanRequest(graph=_graphs()[1]))
+    svc.close()  # crash with r4 admitted but unanswered
+
+    mid = PlanningService.recover(
+        d, journal_fsync=False, config_space=SPACE, backoff_seconds=0.0)
+    assert mid.queue_depth == 1
+    mid.close()  # crash again before draining
+
+    fin = PlanningService.recover(
+        d, journal_fsync=False, config_space=SPACE, backoff_seconds=0.0)
+    assert fin.queue_depth == 1
+    fin.drain()
+    assert set(fin._responses) == set(rids) | {r4}
+    assert fin._responses[r4].ok
+    fin.close()
+
+
+def test_recover_honours_precrash_cancel(tmp_path):
+    d = tmp_path / "j"
+    svc = _service(d)
+    rid = svc.submit(PlanRequest(graph=_graphs()[0]))
+    assert svc.cancel(rid)
+    svc.close()  # crash before any tick
+
+    rec = PlanningService.recover(
+        d, journal_fsync=False, config_space=SPACE, backoff_seconds=0.0)
+    assert rec.queue_depth == 0  # answered at recovery, not re-enqueued
+    resp = rec.collect(rid)
+    assert resp is not None and resp.error_type == "RequestCancelled"
+    rec.close()
+
+
+def test_recovered_deadline_restarts_with_admission_budget(tmp_path):
+    """Deadlines are journaled as remaining budget: a recovered request
+    gets its full budget back (monotonic clocks do not survive a crash),
+    and an infinite deadline stays infinite."""
+    d = tmp_path / "j"
+    svc = _service(d)
+    svc.submit(PlanRequest(graph=_graphs()[0], deadline_seconds=123.0))
+    svc.submit(PlanRequest(graph=_graphs()[0]))
+    svc.close()
+    rec = PlanningService.recover(
+        d, journal_fsync=False, config_space=SPACE, backoff_seconds=0.0)
+    adms = list(rec._queue)
+    now = rec.clock()
+    assert 120.0 < adms[0].deadline - now < 124.0
+    assert adms[1].deadline == float("inf")
+    rec.close()

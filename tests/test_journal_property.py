@@ -1,0 +1,197 @@
+"""Property-based kill-point testing of the write-ahead journal.
+
+The PR's headline robustness property, exercised three ways over ONE
+journaled 50-request run (built once per module — the expensive part):
+
+* **every record boundary** — exhaustively truncate the WAL after each of
+  its records, recover, drain: the answered set is exactly the
+  durably-owed set (every durable admit + every durable response), every
+  response bit-identical to the uninterrupted run's, no duplicates, no
+  losses;
+* **any byte offset** (hypothesis) — a crash does not respect record
+  boundaries, so truncate at arbitrary byte offsets: the torn partial
+  line is dropped and the boundary property holds for the surviving
+  record prefix;
+* **interior corruption** (hypothesis) — flip any byte of any non-final
+  record: recovery must REFUSE with ``JournalCorrupt`` rather than
+  replay a log it cannot trust.
+
+Plus hypothesis round-trip properties for the bit-exact float/array
+codecs the whole scheme rests on.
+"""
+import json
+import math
+import struct
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+# tmp_path is shared across a test's examples (each example writes its own
+# uniquely-named crash dir inside it), so the function-scoped-fixture
+# health check does not apply.
+_SETTINGS = dict(
+    deadline=None,
+    suppress_health_check=[HealthCheck.function_scoped_fixture],
+)
+
+from repro.core import frontend, journal as J
+from repro.core.arch import paper_config_space
+from repro.core.errors import JournalCorrupt
+from repro.core.ir import as_graph, residual_block_ir
+from repro.core.service import PlanRequest, PlanningService
+
+SPACE = tuple(paper_config_space())
+
+
+def _bits(x: float) -> bytes:
+    return struct.pack("<d", float(x))
+
+
+def assert_responses_equivalent(a, b):
+    """Bit-identical *answers*: everything except per-run timing."""
+    assert a.request_id == b.request_id
+    assert a.ok == b.ok
+    assert a.error_type == b.error_type
+    assert (a.engine, a.rung, a.exact, a.degraded) == (
+        b.engine, b.rung, b.exact, b.degraded)
+    assert _bits(a.quality_bound) == _bits(b.quality_bound)
+    if a.plan is None:
+        assert b.plan is None
+        return
+    pa, pb = a.plan, b.plan
+    assert pa.best_hw == pb.best_hw
+    assert np.array_equal(pa.best_cuts, pb.best_cuts)
+    for f in ("bandwidth_words", "latency_cycles", "energy_nj", "area_um2"):
+        assert _bits(getattr(pa.best_metrics, f)) == _bits(
+            getattr(pb.best_metrics, f))
+    assert pa.group_sizes == pb.group_sizes
+
+
+@pytest.fixture(scope="module")
+def base_run(tmp_path_factory):
+    """One journaled 50-request run: (wal_bytes, {rid: expected response})."""
+    d = tmp_path_factory.mktemp("journal_base")
+    svc = PlanningService(
+        journal_dir=d, journal_fsync=False, snapshot_every=0,
+        config_space=SPACE, backoff_seconds=0.0)
+    graphs = [as_graph(frontend.mlp_block_graph()),
+              as_graph(residual_block_ir())]
+    rids = []
+    for i in range(50):
+        rids.append(svc.submit(PlanRequest(
+            graph=graphs[i % len(graphs)],
+            sram_budget_words=[float("inf"), 2e6][(i // 2) % 2],
+        )))
+        if i % 7 == 6:  # interleave ticks so tick records pepper the WAL
+            svc.tick()
+    svc.drain()
+    expected = {rid: svc._responses[rid] for rid in rids}
+    svc.close()
+    wal_bytes = (d / J.WAL_NAME).read_bytes()
+    assert len(expected) == 50
+    return wal_bytes, expected
+
+
+def _recover_and_check(tmp_path, wal_prefix_bytes: bytes, expected, tag):
+    """Write a truncated WAL, recover, drain, and assert the exactly-once
+    contract for whatever records survived intact."""
+    crash_dir = tmp_path / f"crash_{tag}"
+    crash_dir.mkdir(exist_ok=True)  # shrinking replays the same example
+    (crash_dir / J.WAL_NAME).write_bytes(wal_prefix_bytes)
+
+    # The durable prefix: complete, parseable lines (the torn final
+    # partial line — if any — must be dropped by recovery).
+    prefix = []
+    for line in wal_prefix_bytes.decode("utf-8", errors="replace").split("\n"):
+        try:
+            prefix.append(json.loads(line))
+        except json.JSONDecodeError:
+            break
+    admitted = {r["payload"]["rid"] for r in prefix if r["type"] == "admit"}
+    pre_answered = {
+        r["payload"]["rid"] for r in prefix if r["type"] == "response"
+    }
+    owed = admitted | pre_answered  # cache hits answer without an admit
+
+    svc = PlanningService.recover(
+        crash_dir, journal_fsync=False, snapshot_every=0,
+        config_space=SPACE, backoff_seconds=0.0)
+    assert svc.queue_depth == len(admitted - pre_answered)
+    svc.drain()
+
+    got = dict(svc._responses)
+    assert set(got) == owed  # no loss, no duplicate, no invention
+    for rid in owed:
+        assert_responses_equivalent(expected[rid], got[rid])
+    for rid in pre_answered:  # replayed answers: byte-identical timing too
+        assert got[rid].latency_seconds == expected[rid].latency_seconds
+    svc.close()
+
+
+def test_kill_point_at_every_record_boundary(base_run, tmp_path):
+    """Exhaustive: the service dies after each record it ever wrote."""
+    wal_bytes, expected = base_run
+    lines = wal_bytes.decode().splitlines(keepends=True)
+    assert len(lines) > 50  # 50 responses + admits + ticks
+    for cut in range(len(lines) + 1):
+        _recover_and_check(
+            tmp_path, b"".join(line.encode() for line in lines[:cut]),
+            expected, f"line{cut}")
+
+
+@settings(max_examples=25, **_SETTINGS)
+@given(data=st.data())
+def test_kill_point_at_any_byte_offset(base_run, tmp_path, data):
+    """A crash tears mid-record: truncate at an arbitrary byte offset."""
+    wal_bytes, expected = base_run
+    offset = data.draw(st.integers(0, len(wal_bytes)), label="byte_offset")
+    _recover_and_check(tmp_path, wal_bytes[:offset], expected, f"b{offset}")
+
+
+@settings(max_examples=25, **_SETTINGS)
+@given(data=st.data())
+def test_interior_corruption_is_refused(base_run, tmp_path, data):
+    """Flip one byte of any non-final record: replay must refuse loudly
+    (a silently-wrong replayed state is the one unacceptable outcome)."""
+    wal_bytes, _ = base_run
+    lines = wal_bytes.decode().splitlines(keepends=True)
+    li = data.draw(st.integers(0, len(lines) - 2), label="line")
+    line = bytearray(lines[li].encode())
+    bi = data.draw(st.integers(0, len(line) - 2), label="byte")  # keep \n
+    old = line[bi]
+    new = data.draw(
+        st.integers(33, 125).filter(lambda b: b != old), label="newbyte")
+    line[bi] = new
+    corrupted = b"".join(
+        bytes(line) if i == li else l.encode() for i, l in enumerate(lines))
+    crash_dir = tmp_path / f"corrupt_{li}_{bi}_{new}"
+    crash_dir.mkdir(exist_ok=True)
+    (crash_dir / J.WAL_NAME).write_bytes(corrupted)
+    with pytest.raises(JournalCorrupt):
+        J.load(crash_dir)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(allow_nan=True, allow_infinity=True))
+def test_float_codec_round_trips_bit_exactly(x):
+    y = J.dec_float(J.enc_float(x))
+    if math.isnan(x):
+        assert math.isnan(y)
+    else:
+        assert _bits(x) == _bits(y)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(allow_nan=True, allow_infinity=True),
+             min_size=0, max_size=32),
+    st.sampled_from([np.float64, np.float32, np.int64, np.bool_]),
+)
+def test_array_codec_round_trips_bit_exactly(values, dtype):
+    a = np.asarray(values, dtype=np.float64).astype(dtype)
+    b = J.dec_array(J.enc_array(a))
+    assert b.dtype == a.dtype and b.shape == a.shape
+    assert a.tobytes() == b.tobytes()

@@ -71,7 +71,7 @@ def test_sharded_train_step_matches_single_device():
     params_s = jax.device_put(params, pshard)
     opt_s = jax.device_put(opt, oshard)
     batch_s = jax.device_put(batch, bshard)
-    with jax.set_mesh(mesh):
+    with SH.use_mesh(mesh):
         p2, o2, m2 = jax.jit(step, in_shardings=(pshard, oshard, bshard))(
             params_s, opt_s, batch_s)
     print("loss1", float(m1["loss"]), "loss2", float(m2["loss"]))
@@ -117,6 +117,7 @@ def test_pipeline_parallel_matches_sequential():
     out = run_py("""
     from functools import partial
     from repro.launch.mesh import make_mesh
+    from repro.parallel import sharding as SH
     from repro.parallel.pipeline import pipeline_apply, bubble_fraction
 
     stages, n_micro, mb, d = 4, 6, 8, 16
@@ -128,7 +129,7 @@ def test_pipeline_parallel_matches_sequential():
         return jnp.tanh(x @ w)
 
     x = jax.random.normal(jax.random.key(1), (n_micro, mb, d))
-    with jax.set_mesh(mesh):
+    with SH.use_mesh(mesh):
         out = pipeline_apply(stage_fn, ws, x, mesh=mesh)
     # sequential reference
     ref = x
@@ -147,6 +148,7 @@ def test_compressed_train_step_learns_with_s8_wire():
     from repro.launch.mesh import make_mesh
     from repro.models import model as M
     from repro.optim import AdamWConfig, init_opt_state
+    from repro.parallel import sharding as SH
     from repro.runtime.spmd_train import make_compressed_train_step
 
     cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
@@ -161,7 +163,7 @@ def test_compressed_train_step_learns_with_s8_wire():
     ef = init_ef(params)
     batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 32), 0, 128),
              "labels": jax.random.randint(jax.random.key(2), (8, 32), 0, 128)}
-    with jax.set_mesh(mesh):
+    with SH.use_mesh(mesh):
         jstep = jax.jit(step)
         losses = []
         for _ in range(8):
@@ -249,18 +251,19 @@ def test_compressed_psum_accuracy_and_wire_dtype():
     from functools import partial
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_mesh
+    from repro.parallel import sharding as SH
     from repro.parallel.compression import compressed_psum
 
     mesh = make_mesh((2,), ("pod",))
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-             check_vma=False)
+    @partial(SH.shard_map_unchecked, mesh=mesh, in_specs=P("pod"),
+             out_specs=P("pod"))
     def sync(x):
         out, err = compressed_psum(x[0], "pod", mean=True)
         return (out + err * 0)[None]
 
     x = jax.random.normal(jax.random.key(0), (2, 1024)) * 3.0
-    with jax.set_mesh(mesh):
+    with SH.use_mesh(mesh):
         got = sync(x)
         txt = jax.jit(sync).lower(x).compile().as_text()
     expect = x.mean(axis=0)
