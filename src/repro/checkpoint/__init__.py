@@ -1,4 +1,11 @@
 """Checkpointing: atomic, hashed, async-capable, resharding-aware."""
 from .checkpoint import (  # noqa: F401
-    AsyncCheckpointer, device_put_like, latest_step, restore, save,
+    SWEEP_RECORD_TYPES,
+    AsyncCheckpointer,
+    SweepCheckpoint,
+    device_put_like,
+    latest_step,
+    restore,
+    save,
+    sweep_fingerprint,
 )

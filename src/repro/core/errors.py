@@ -35,9 +35,22 @@ Taxonomy::
     |                                   #   chunk boundary
     +-- AuditMismatch                   # online shadow audit: served plan
     |                                   #   diverged from the scalar oracle
+    +-- PoisonedResultError             # every candidate for a graph was
+    |                                   #   quarantined (NaN/Inf/negative/
+    |                                   #   overflowed cost rows)
     +-- JournalCorrupt                  # write-ahead log failed verification
+
+:class:`RetryPolicy` lives here too: the one tested retry/backoff
+implementation shared by the service's request-level retries and the
+fleet sweep's per-chunk salvage, so both layers classify faults the same
+way (typed :class:`EvaluatorError` = deterministic, never retried;
+anything else = possibly transient, retried with exponential backoff).
 """
 from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
 
 
 class EvaluatorError(Exception):
@@ -124,6 +137,90 @@ class AuditMismatch(EvaluatorError):
     """The online shadow audit re-scored a served plan against the scalar
     oracle (``bandwidth_ref`` et al.) and the metrics diverged — the fast
     path produced a silently wrong answer, which must fail loudly."""
+
+
+class PoisonedResultError(EvaluatorError, ArithmeticError):
+    """Every candidate cell for a graph was quarantined by the finite
+    guard (NaN/Inf, negative, or ``> 2**53`` raw cost rows), so no argmin
+    or Pareto front can be composed.  Partial poisoning never raises —
+    poisoned cells are excluded and reported via the ``quarantine`` field
+    on :class:`~repro.core.flow.FlowResult` — this error is the *total*
+    case only.  ``quarantined`` carries the per-cell provenance records."""
+
+    def __init__(self, message: str, *, quarantined: tuple = ()):
+        """Attach the quarantined-cell provenance records."""
+        super().__init__(message)
+        self.quarantined = tuple(quarantined)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff, shared service-wide.
+
+    One implementation classifies faults for both the request path
+    (:meth:`repro.core.service.PlanningService._with_retries`) and the
+    compute path (per-chunk salvage in :func:`repro.core.flow.run_fleet`):
+    a typed :class:`EvaluatorError` is deterministic — retrying cannot
+    change the answer — so it propagates immediately; any other exception
+    is treated as transient and retried up to ``max_retries`` times,
+    sleeping ``backoff_seconds * multiplier**attempt`` (capped at
+    ``max_backoff_seconds``) between attempts.  Exhaustion raises
+    :class:`TransientFailure` carrying the last cause and attempt count.
+    """
+
+    max_retries: int = 3
+    backoff_seconds: float = 0.05
+    multiplier: float = 2.0
+    max_backoff_seconds: float = 5.0
+
+    def __post_init__(self):
+        """Validate the knobs at construction, not first use."""
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_seconds < 0:
+            raise ValueError("backoff_seconds must be >= 0")
+        if self.multiplier < 1.0:
+            raise ValueError("multiplier must be >= 1")
+        if self.max_backoff_seconds < 0:
+            raise ValueError("max_backoff_seconds must be >= 0")
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (0-based), capped."""
+        return min(self.backoff_seconds * self.multiplier ** attempt,
+                   self.max_backoff_seconds)
+
+    def call(self, fn: Callable[[], Any], *,
+             sleep: Callable[[float], None] = time.sleep,
+             describe: str = "operation",
+             on_retry: "Callable[[int, BaseException], None] | None" = None,
+             ) -> Any:
+        """Run ``fn`` under this policy and return its result.
+
+        ``sleep`` is injectable so tests (and fault harnesses) can run
+        with zero wall-clock cost; ``describe`` names the operation in
+        the :class:`TransientFailure` message on exhaustion;
+        ``on_retry(attempt, exc)`` fires on every caught transient (the
+        service counts them).
+        """
+        last: BaseException | None = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn()
+            except EvaluatorError:
+                raise  # deterministic: retrying cannot change the answer
+            except Exception as exc:  # noqa: BLE001 - transient boundary
+                last = exc
+                if on_retry is not None:
+                    on_retry(attempt, exc)
+                if attempt < self.max_retries:
+                    delay = self.delay(attempt)
+                    if delay > 0:
+                        sleep(delay)
+        raise TransientFailure(
+            f"{describe} failed after {self.max_retries + 1} attempts "
+            f"({type(last).__name__}: {last})",
+            cause=last, attempts=self.max_retries + 1,
+        )
 
 
 class JournalCorrupt(EvaluatorError, IOError):

@@ -33,7 +33,13 @@ from . import fusion
 from . import metrics as M
 from ..parallel.sharding import hardware_mesh, mesh_fingerprint
 from .arch import Constraints, DLAConfig, default_config_space
-from .errors import InfeasibleBudgetError, InfeasibleConstraintsError
+from .errors import (
+    InfeasibleBudgetError,
+    InfeasibleConstraintsError,
+    PoisonedResultError,
+    RetryPolicy,
+    TransientFailure,
+)
 from .ir import (
     GraphIR,
     NetworkIR,
@@ -77,6 +83,8 @@ class FlowResult:
     # (architecture x fusion plan) Pareto front over the feasible sweep,
     # populated when the flow is asked for it (``pareto=True``).
     pareto: "ParetoFront | None" = None
+    # Cells the finite guard excluded (None when the sweep was clean).
+    quarantine: "QuarantineReport | None" = None
 
     def describe(self) -> str:
         """One-line summary: best hw, group sizes, and the four metrics."""
@@ -224,6 +232,100 @@ def _metrics_from_row(row: np.ndarray) -> M.Metrics:
     )
 
 
+# ---------------------------------------------------------------------------
+# Poison quarantine — the finite guard over raw sweep planes
+# ---------------------------------------------------------------------------
+
+# Column names of the raw (…, 5) kernel rows, for quarantine provenance.
+RAW_COLUMNS = (
+    "bandwidth_words",
+    "latency_cycles",
+    "sram_accesses",
+    "pb_accesses",
+    "area_um2",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantinedCell:
+    """Provenance of one poisoned sweep cell: which (graph, hw, cut)
+    candidate was excluded, which raw column tripped the finite guard,
+    the offending value, and why (``nan``/``inf``/``negative``/
+    ``overflow`` — overflow meaning above 2^53, where integer word
+    counts stop being exact in f64)."""
+
+    graph: int
+    hw: int
+    cut: int
+    column: str
+    value: float
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineReport:
+    """Every cell the finite guard excluded from one sweep's selection.
+
+    Quarantined cells can never win the argmin or enter a Pareto front —
+    they are removed from the feasible set *before* selection — but the
+    rest of the sweep still answers; only a graph whose ENTIRE candidate
+    set is poisoned raises :class:`~repro.core.errors.PoisonedResultError`.
+    """
+
+    cells: tuple[QuarantinedCell, ...]
+
+    @property
+    def n_cells(self) -> int:
+        """Number of quarantined (graph, hw, cut) cells."""
+        return len(self.cells)
+
+    def describe(self, limit: int = 8) -> str:
+        """Multi-line summary: cell count plus the first ``limit`` cells."""
+        lines = [f"quarantined {self.n_cells} poisoned cells"]
+        for cell in self.cells[:limit]:
+            lines.append(
+                f"  (g={cell.graph}, h={cell.hw}, c={cell.cut}) "
+                f"{cell.column}={cell.value!r} [{cell.reason}]"
+            )
+        if self.n_cells > limit:
+            lines.append(f"  ... {self.n_cells - limit} more")
+        return "\n".join(lines)
+
+
+def _poison_reason(v: float) -> str:
+    """Finite-guard verdict for one offending raw value."""
+    if np.isnan(v):
+        return "nan"
+    if np.isinf(v):
+        return "inf"
+    if v < 0.0:
+        return "negative"
+    return "overflow"
+
+
+def _quarantine_cells(
+    raw: np.ndarray,  # (H, C, 5) one graph's raw plane, real rows only
+    poison: np.ndarray,  # (H, C) bool, from metrics.poison_mask
+    *,
+    graph: int,
+) -> tuple[QuarantinedCell, ...]:
+    """Provenance records for one graph's poisoned cells, naming the first
+    offending raw column of each."""
+    cells = []
+    for h, c in np.argwhere(poison):
+        row = raw[h, c]
+        bad = ~np.isfinite(row) | (row < 0.0) | (row > M.MAX_EXACT_WORDS)
+        k = int(np.flatnonzero(bad)[0])
+        v = float(row[k])
+        cells.append(
+            QuarantinedCell(
+                graph=int(graph), hw=int(h), cut=int(c),
+                column=RAW_COLUMNS[k], value=v, reason=_poison_reason(v),
+            )
+        )
+    return tuple(cells)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParetoFront:
     """Non-dominated (architecture x fusion plan) points of one workload's
@@ -313,6 +415,8 @@ def _best_flow_result(
     search_engine: str = "",
     err_prefix: str = "",
     pareto: bool = False,
+    poison: np.ndarray | None = None,
+    quarantine: "QuarantineReport | None" = None,
 ) -> FlowResult:
     """Constraint filter + min-energy argmin over one graph's sweep output —
     the single best-point selection shared by run_flow and run_fleet (so
@@ -326,9 +430,26 @@ def _best_flow_result(
     index wins — so padding H to a device-count multiple or resharding the
     sweep can never flip the reported best point (asserted at 1/2/8 host
     devices in tests/test_multidevice.py).
+
+    ``poison`` is the finite guard's (H, C) quarantine mask: poisoned
+    cells are excluded from feasibility before any selection, so a NaN /
+    Inf / negative / overflowed cost row can neither win the argmin nor
+    enter the Pareto front.  A fully-poisoned candidate set raises
+    :class:`PoisonedResultError` with the ``quarantine`` provenance.
     """
     limits = constraints.as_row()  # (4,)
     feasible = np.all(out <= limits[None, None, :], axis=-1)  # (H, C)
+    if poison is not None:
+        if poison.all():
+            raise PoisonedResultError(
+                f"{err_prefix}all {poison.size} candidates were poisoned "
+                "(NaN/Inf/negative/overflowed cost rows) — nothing is left "
+                "to select from",
+                quarantined=(
+                    quarantine.cells if quarantine is not None else ()
+                ),
+            )
+        feasible &= ~poison
     n_feas = int(feasible.sum())
     if n_feas == 0:
         raise InfeasibleConstraintsError(
@@ -363,6 +484,7 @@ def _best_flow_result(
             if pareto
             else None
         ),
+        quarantine=quarantine,
     )
 
 
@@ -529,11 +651,26 @@ def run_flow(
             hw_rows,
             area_consts,
         )
+    # f64-exactness guard: the bit-identity guarantee assumes every
+    # feature / edge-word entry is an exactly-representable integer f64
+    # (<= 2^53); a corrupted or overflowed table must fail loudly here,
+    # not silently split ulps inside the sweep.
+    M.assert_exact_f64(args[0], what=f"{g.name} feature table")
+    M.assert_exact_f64(args[3], what=f"{g.name} edge words")
     exe, compile_seconds = _compiled_sweep(M._jit_batch_graph, args)
     # raw (H, C_b, 5) rows -> (H, C, 4) metrics, padded candidate rows
     # sliced off before feasibility/argmin
     raw, sweep_seconds = _run_sweep(exe, args)
     out = M.compose_metrics(raw, hw_rows)[:, :C]
+    # Finite guard: quarantine poisoned raw cells before any selection.
+    poison = M.poison_mask(raw)[:, :C]
+    quarantine = None
+    if poison.any():
+        quarantine = QuarantineReport(
+            cells=_quarantine_cells(raw[:, :C], poison, graph=0)
+        )
+    else:
+        poison = None
     n_cand = out.shape[0] * C
     return _best_flow_result(
         out, cuts_batch, g, config_space, constraints,
@@ -543,6 +680,8 @@ def run_flow(
         candidates_per_second=n_cand / max(sweep_seconds, 1e-9),
         search_engine=provenance,
         pareto=pareto,
+        poison=poison,
+        quarantine=quarantine,
     )
 
 
@@ -559,6 +698,16 @@ class FleetResult:
     # Device layout the sweep ran on: 1 for the single-device program,
     # else the size of the 1-D `hardware` mesh the H axis was sharded over.
     device_count: int = 1
+    # Fleet-wide finite-guard report (None when every raw cell was clean).
+    quarantine: "QuarantineReport | None" = None
+    # Salvage/resume accounting: chunks actually computed this call vs
+    # restored from a sweep checkpoint (1/0 for an unchunked sweep), chunk
+    # indices the straggler detector flagged, and whether a sick mesh was
+    # degraded to the single-device program mid-call.
+    chunks_computed: int = 1
+    chunks_restored: int = 0
+    straggler_chunks: tuple[int, ...] = ()
+    mesh_degraded: bool = False
 
     def describe(self) -> str:
         """One-line summary of the fleet sweep (incl. mesh, if sharded)."""
@@ -567,11 +716,18 @@ class FleetResult:
             if self.device_count > 1
             else ""
         )
+        if self.mesh_degraded:
+            mesh = ", mesh degraded to single-device"
+        salvage = (
+            f", {self.chunks_restored} chunks restored"
+            if self.chunks_restored
+            else ""
+        )
         lines = [
             f"fleet of {self.n_graphs}: {self.n_candidates} candidates in "
             f"{self.sweep_seconds*1e3:.2f} ms "
             f"({self.candidates_per_second:,.0f} cand/s, one compile "
-            f"{self.compile_seconds*1e3:.0f} ms{mesh})"
+            f"{self.compile_seconds*1e3:.0f} ms{mesh}{salvage})"
         ]
         lines += [f"  {r.describe()}" for r in self.results]
         return "\n".join(lines)
@@ -588,6 +744,9 @@ def run_fleet(
     pareto: bool = False,
     hw_chunk: int | None = None,
     abort_check=None,
+    retry_policy: RetryPolicy | None = None,
+    checkpoint_dir=None,
+    hooks=None,
 ) -> FleetResult:
     """Sweep many graphs' (hw x grouping) cross-products in ONE XLA program.
 
@@ -661,6 +820,36 @@ def run_fleet(
     killing a kernel mid-flight.  ``hw_chunk`` cannot be combined with
     ``devices`` (the sharded program already splits H across the mesh).
 
+    Fault tolerance (all off by default):
+
+    * ``retry_policy`` (:class:`repro.core.errors.RetryPolicy`) retries
+      each chunk's compile+execute on non-evaluator failures with
+      exponential backoff; exhaustion raises a typed
+      :class:`~repro.core.errors.TransientFailure`.  On the sharded
+      (``devices=``) path, exhaustion instead *degrades*: the sweep falls
+      back down :func:`repro.runtime.elastic.sweep_degradation_ladder`
+      to the single-device program — bit-identical results, only slower
+      (``FleetResult.mesh_degraded`` records it).
+    * ``checkpoint_dir`` (requires ``hw_chunk``) persists every completed
+      chunk's raw plane through the journal's bit-exact codecs
+      (:class:`repro.checkpoint.SweepCheckpoint`); a killed sweep re-run
+      with the same arguments restores completed chunks and recomputes
+      only the missing ones (``chunks_restored``/``chunks_computed``) —
+      the resumed :class:`FleetResult` is bit-identical to an unkilled
+      run.  The checkpoint is keyed by a fingerprint of the full argument
+      set, so a different sweep can never splice in stale planes.
+    * Per-chunk wall times feed a running-median straggler detector
+      (:class:`repro.runtime.fault_tolerance.StragglerDetector`); flagged
+      chunk indices are reported in ``FleetResult.straggler_chunks``.
+    * ``hooks`` is a duck-typed fault seam (``before_chunk_compute(i,
+      device_count=...)`` may raise to simulate a shard/compile failure;
+      ``poison_plane(plane, h0)`` may corrupt a raw plane) used by
+      :class:`repro.testing.faults.FaultInjector`; every raw plane then
+      passes the finite guard, so injected NaN/Inf/negative/overflow
+      cells are quarantined with (g, h, c) provenance
+      (``FleetResult.quarantine``) and can never win the argmin or enter
+      a Pareto front.
+
     Example — per-graph explicit cut batches (the service/bench form) and
     a sharded hardware axis::
 
@@ -683,6 +872,11 @@ def run_fleet(
             )
         if hw_chunk <= 0:
             raise ValueError(f"hw_chunk must be positive, got {hw_chunk}")
+    if checkpoint_dir is not None and hw_chunk is None:
+        raise ValueError(
+            "checkpoint_dir requires hw_chunk: completed hardware-axis "
+            "chunks are the checkpoint grain"
+        )
     if config_space is None:
         config_space = default_config_space()
     graphs = [as_graph(ir) for ir in irs]
@@ -774,42 +968,141 @@ def run_fleet(
         np.stack([pg.node_mask for pg in padded]),
         np.stack([pg.edge_mask for pg in padded]),
     )
+    # f64-exactness guard on the giant-config feature tables (llama4 /
+    # arctic edge words reach ~1e10 — far below 2^53, but a corrupted or
+    # overflowed table must fail loudly before the sweep, not split ulps
+    # silently inside it).
+    M.assert_exact_f64(args[0], what="fleet feature table")
+    M.assert_exact_f64(args[3], what="fleet edge words")
     if abort_check is not None:
         abort_check()
-    if hw_chunk is None or hw_chunk >= H:
-        exe, compile_seconds = _compiled_sweep(kernel, args, mesh_key=mesh_key)
-        # The sharded path's (G, H_padded, C_b, 5) raw plane arrives here as
-        # the sweep's single cross-device gather; padded hardware rows are
-        # sliced off before energy composition so both paths compose
-        # identically.
-        raw, sweep_seconds = _run_sweep(exe, args)
+
+    hook_before = (
+        getattr(hooks, "before_chunk_compute", None)
+        if hooks is not None else None
+    )
+    hook_poison = (
+        getattr(hooks, "poison_plane", None) if hooks is not None else None
+    )
+    sweep_device_count = 1 if devices is None else int(mesh.devices.size)
+
+    def _compute(chunk_index, c_args, c_kernel, c_mesh_key, h0, d_count):
+        """One chunk's compile+execute, under the retry policy + hooks."""
+
+        def attempt():
+            if hook_before is not None:
+                hook_before(chunk_index, device_count=d_count)
+            exe, dt_c = _compiled_sweep(c_kernel, c_args, mesh_key=c_mesh_key)
+            plane, dt_s = _run_sweep(exe, c_args)
+            return plane, dt_c, dt_s
+
+        if retry_policy is None:
+            plane, dt_c, dt_s = attempt()
+        else:
+            plane, dt_c, dt_s = retry_policy.call(
+                attempt, describe=f"hw chunk {chunk_index}"
+            )
+        if hook_poison is not None:
+            plane = hook_poison(plane, h0)
+        return plane, dt_c, dt_s
+
+    mesh_degraded = False
+    chunks_restored = 0
+    straggler_chunks: tuple[int, ...] = ()
+    if hw_chunk is None:
+        chunks_computed = 1
+        try:
+            raw, compile_seconds, sweep_seconds = _compute(
+                0, args, kernel, mesh_key, 0, sweep_device_count
+            )
+        except TransientFailure:
+            from ..runtime.elastic import sweep_degradation_ladder
+
+            ladder = sweep_degradation_ladder(devices)[1:]
+            if not ladder:
+                raise
+            # The mesh is sick (compile/execute kept failing through the
+            # retry budget): degrade to the ladder's single-device rung.
+            # The sharded kernel is row-parallel with no cross-row
+            # reduction, so the salvaged result is bit-identical to the
+            # mesh sweep — the fallback trades throughput, never answers.
+            mesh_degraded = True
+            kernel, mesh_key = M._jit_fleet_graph, _SINGLE_MESH_KEY
+            args = args[:7] + (hw_rows,) + args[8:]
+            raw, compile_seconds, sweep_seconds = _compute(
+                0, args, kernel, mesh_key, 0, 1
+            )
     else:
         # Resumable chunked sweep: one program per ≤hw_chunk-row slice of
         # the config space, abort_check between slices.  Raw rows are
         # per-candidate-exact, so the reassembled plane is bit-identical
-        # to the single-program sweep.
+        # to the single-program sweep.  With ``checkpoint_dir`` every
+        # completed plane is durable before the loop advances, so a kill
+        # at ANY boundary resumes with exactly-once recomputation.
+        from ..runtime.fault_tolerance import StragglerDetector
+
+        restored: dict[int, np.ndarray] = {}
+        ckpt = None
+        if checkpoint_dir is not None:
+            from ..checkpoint import SweepCheckpoint, sweep_fingerprint
+
+            ckpt = SweepCheckpoint(checkpoint_dir)
+            restored = ckpt.load(sweep_fingerprint(args, hw_chunk))
+        detector = StragglerDetector(min_deadline_s=0.0)
         compile_seconds = sweep_seconds = 0.0
+        chunks_computed = 0
+        stragglers: list[int] = []
         planes = []
-        for h0 in range(0, H, hw_chunk):
+        for ci, h0 in enumerate(range(0, H, hw_chunk)):
             if abort_check is not None and h0:
                 abort_check()
+            plane = restored.get(h0)
+            if plane is not None:
+                planes.append(plane)
+                chunks_restored += 1
+                continue
             chunk_args = (
                 args[:7] + (hw_rows[h0:h0 + hw_chunk],) + args[8:]
             )
-            exe, dt_c = _compiled_sweep(
-                kernel, chunk_args, mesh_key=mesh_key
+            t_chunk = time.perf_counter()
+            plane, dt_c, dt_s = _compute(
+                ci, chunk_args, kernel, mesh_key, h0, sweep_device_count
             )
-            plane, dt_s = _run_sweep(exe, chunk_args)
+            # Straggler detection on wall time net of compile (a cold
+            # cache is not a sick worker); the detector needs 5 samples
+            # before it flags, so early chunks only seed the median.
+            dt_wall = time.perf_counter() - t_chunk - dt_c
+            if detector.is_straggler(dt_wall):
+                stragglers.append(ci)
+            detector.observe(dt_wall)
+            if ckpt is not None:
+                ckpt.append_chunk(h0, plane)
             planes.append(plane)
+            chunks_computed += 1
             compile_seconds += dt_c
             sweep_seconds += dt_s
+        straggler_chunks = tuple(stragglers)
         raw = np.concatenate(planes, axis=1)
     out = M.compose_metrics(raw[:, :H], hw_rows)  # (G, H, C_b, 4)
+    # Finite guard over the whole fleet's raw plane: poisoned cells are
+    # quarantined per graph before any argmin/Pareto selection.
+    poison_all = M.poison_mask(raw[:, :H])  # (G, H, C_b)
+    any_poison = bool(poison_all.any())
+    fleet_cells: list[QuarantinedCell] = []
     n_cand = H * sum(counts)
     fleet_cps = n_cand / max(sweep_seconds, 1e-9)
     results = []
     for gi, g in enumerate(graphs):
         C = counts[gi]
+        g_poison = None
+        g_quar = None
+        if any_poison:
+            pm = poison_all[gi, :, :C]
+            if pm.any():
+                cells = _quarantine_cells(raw[gi, :H, :C], pm, graph=gi)
+                g_quar = QuarantineReport(cells=cells)
+                fleet_cells.extend(cells)
+                g_poison = pm
         results.append(
             _best_flow_result(
                 out[gi, :, :C],  # padded candidate rows sliced off
@@ -822,6 +1115,8 @@ def run_fleet(
                 search_engine=provenances[gi],
                 err_prefix=f"{g.name}: ",
                 pareto=pareto,
+                poison=g_poison,
+                quarantine=g_quar,
             )
         )
     return FleetResult(
@@ -831,7 +1126,16 @@ def run_fleet(
         compile_seconds=compile_seconds,
         sweep_seconds=sweep_seconds,
         candidates_per_second=fleet_cps,
-        device_count=1 if devices is None else int(mesh.devices.size),
+        device_count=1 if mesh_degraded else sweep_device_count,
+        quarantine=(
+            QuarantineReport(cells=tuple(fleet_cells))
+            if fleet_cells
+            else None
+        ),
+        chunks_computed=chunks_computed,
+        chunks_restored=chunks_restored,
+        straggler_chunks=straggler_chunks,
+        mesh_degraded=mesh_degraded,
     )
 
 

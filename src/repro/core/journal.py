@@ -328,9 +328,12 @@ def dec_response(d: dict):
 # ---------------------------------------------------------------------------
 
 
-def _digest(seq: int, rtype: str, payload: dict) -> str:
+def record_digest(seq: int, rtype: str, payload: dict) -> str:
     """sha256 over the canonical (seq, type, payload) JSON — the same
-    per-item integrity idiom as the checkpoint manifest."""
+    per-item integrity idiom as the checkpoint manifest.  Public: the
+    sweep-chunk checkpoint store (:mod:`repro.checkpoint`) digests its
+    records through this exact function, so every durable byte in the
+    system shares one verification idiom."""
     blob = json.dumps([seq, rtype, payload], sort_keys=True,
                       separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
@@ -376,7 +379,7 @@ class Journal:
                 "seq": self._seq,
                 "type": rtype,
                 "payload": payload,
-                "digest": _digest(self._seq, rtype, payload),
+                "digest": record_digest(self._seq, rtype, payload),
             }
             self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
             self._fh.flush()
@@ -411,7 +414,7 @@ class Journal:
             "seq": seq,
             "state": state_payload,
         }
-        body["digest"] = _digest(seq, "snapshot", state_payload)
+        body["digest"] = record_digest(seq, "snapshot", state_payload)
         final = self.dir / f"{SNAPSHOT_PREFIX}{seq:012d}.json"
         tmp = self.dir / f"{SNAPSHOT_PREFIX}{seq:012d}.json.tmp"
         tmp.write_text(json.dumps(body, separators=(",", ":")))
@@ -467,7 +470,7 @@ def _read_wal(journal_dir, *, allow_torn_tail: bool) -> list[dict]:
             continue
         try:
             rec = json.loads(line)
-            ok = rec.get("digest") == _digest(
+            ok = rec.get("digest") == record_digest(
                 rec["seq"], rec["type"], rec["payload"]
             )
         except (json.JSONDecodeError, KeyError, TypeError):
@@ -502,7 +505,7 @@ def latest_snapshot(journal_dir) -> dict | None:
     if not snaps:
         return None
     body = json.loads(snaps[-1].read_text())
-    if body.get("digest") != _digest(body["seq"], "snapshot", body["state"]):
+    if body.get("digest") != record_digest(body["seq"], "snapshot", body["state"]):
         raise JournalCorrupt(f"{snaps[-1]}: snapshot digest mismatch")
     return body
 
@@ -528,3 +531,7 @@ def load(journal_dir) -> tuple[dict | None, list[dict]]:
                 f"journal sequence gap: expected {expect}, got {r['seq']}"
             )
     return (snap["state"] if snap is not None else None), records
+
+
+# Back-compat alias for the pre-public name (tests and older callers).
+_digest = record_digest

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .errors import ConfigValidationError
+from .errors import ConfigValidationError, GraphValidationError
 from jax.experimental import enable_x64
 
 from .arch import DLAConfig
@@ -590,6 +590,55 @@ def compose_metrics(raw, hw_rows) -> np.ndarray:
     e_pb = hw[:, H_EPB, None]
     energy = e_dram * bw + e_sram * c_sram + e_pb * c_pb
     return np.stack([bw, lat, energy, area], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Finite guard — poison detection on raw result planes
+# ---------------------------------------------------------------------------
+
+# The bit-identity discipline: every raw kernel row is an exact
+# integer-valued float64, so any count above 2^53 has silently lost ulps
+# and the "bit-identical across kernel variants" guarantee is void.
+MAX_EXACT_WORDS = float(2 ** 53)
+
+
+def poison_mask(raw) -> np.ndarray:
+    """(…, 5) raw kernel rows -> (…,) bool mask of *poisoned* cells.
+
+    A cell (one [bw, lat, c_sram, c_pb, area] row) is poisoned when any
+    entry is NaN, +/-Inf, negative, or above ``2**53`` (the largest f64
+    magnitude at which integer word counts are still exact) — any such
+    row would silently corrupt the argmin / Pareto composition, so
+    :mod:`repro.core.flow` excludes these cells *before* selection and
+    reports them with (g, h, c) provenance instead.
+    """
+    raw = np.asarray(raw)
+    bad = ~np.isfinite(raw) | (raw < 0.0) | (raw > MAX_EXACT_WORDS)
+    return np.any(bad, axis=-1)
+
+
+def assert_exact_f64(arr, *, what: str = "feature table") -> None:
+    """Assert ``arr`` holds exactly-representable f64 word counts.
+
+    The evaluator's equality-to-oracle guarantee assumes every feature /
+    edge-word entry is a finite, non-negative, integer-valued float64
+    below ``2**53``.  The giant-config zoo graphs (llama4 / arctic edge
+    words reach ~1e10) are well inside that range, but a corrupted or
+    overflowed table would break bit-identity silently — fail loudly at
+    the sweep boundary instead.  Raises :class:`GraphValidationError`
+    naming ``what`` and the first offending flat index.
+    """
+    a = np.asarray(arr, dtype=np.float64)
+    bad = ~np.isfinite(a) | (a < 0.0) | (a > MAX_EXACT_WORDS) | (
+        a != np.floor(a)
+    )
+    if bad.any():
+        idx = int(np.flatnonzero(bad.ravel())[0])
+        raise GraphValidationError(
+            f"{what} is not exactly representable in f64: entry at flat "
+            f"index {idx} is {a.ravel()[idx]!r} (must be a finite, "
+            f"non-negative integer <= 2**53 for bit-exact evaluation)"
+        )
 
 
 def evaluate_batch_graph(

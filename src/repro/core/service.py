@@ -118,6 +118,7 @@ from .errors import (
     EvaluatorError,
     GraphValidationError,
     RequestCancelled,
+    RetryPolicy,
     ServiceOverloaded,
     TransientFailure,
 )
@@ -254,6 +255,8 @@ class PlanningService:
         plan_cache_capacity: int = 512,
         max_retries: int = 3,
         backoff_seconds: float = 0.05,
+        retry_policy: RetryPolicy | None = None,
+        checkpoint_dir=None,
         faults=None,
         clock: Callable[[], float] = time.monotonic,
         journal_dir=None,
@@ -277,7 +280,14 @@ class PlanningService:
         tick's micro-batch by shape-bucket affinity.  A positive
         ``breaker_threshold`` arms the circuit breaker;
         ``shadow_audit_rate`` (0..1) re-scores that fraction of served
-        plans against the scalar oracle."""
+        plans against the scalar oracle.
+
+        ``retry_policy`` overrides the :class:`RetryPolicy` built from
+        ``max_retries``/``backoff_seconds``; the ONE policy governs both
+        request-level retries and the sweep's per-chunk salvage.
+        ``checkpoint_dir`` (requires ``hw_chunk``) persists completed
+        sweep chunks so a killed sweep resumes without recomputing them —
+        pair it with ``journal_dir`` and :meth:`recover`."""
         self.config_space = tuple(
             config_space if config_space is not None else default_config_space()
         )
@@ -286,9 +296,23 @@ class PlanningService:
         self.max_batch = int(max_batch)
         self.max_retries = int(max_retries)
         self.backoff_seconds = float(backoff_seconds)
+        self.retry_policy = (
+            retry_policy
+            if retry_policy is not None
+            else RetryPolicy(
+                max_retries=self.max_retries,
+                backoff_seconds=self.backoff_seconds,
+            )
+        )
         self.faults = faults
         self.clock = clock
         self.hw_chunk = None if hw_chunk is None else int(hw_chunk)
+        if checkpoint_dir is not None and self.hw_chunk is None:
+            raise ValueError(
+                "checkpoint_dir requires hw_chunk: completed hardware-axis "
+                "chunks are the checkpoint grain"
+            )
+        self.checkpoint_dir = checkpoint_dir
         self.affinity_batching = bool(affinity_batching)
 
         self._queue: collections.deque[_Admitted] = collections.deque()
@@ -672,26 +696,16 @@ class PlanningService:
     # ------------------------------------------------------------------
 
     def _with_retries(self, fn: Callable[[], flow.FleetResult]):
-        """Bounded retry-with-backoff for transient (non-evaluator)
-        failures.  Typed evaluator errors are deterministic verdicts and
-        propagate immediately."""
-        last: BaseException | None = None
-        for attempt in range(self.max_retries + 1):
-            try:
-                return fn()
-            except EvaluatorError:
-                raise
-            except Exception as e:  # transient: injected faults, races
-                last = e
-                self._counters["transient_retries"] += 1
-                if attempt < self.max_retries and self.backoff_seconds > 0:
-                    time.sleep(self.backoff_seconds * (2**attempt))
-        raise TransientFailure(
-            f"sweep failed after {self.max_retries + 1} attempts "
-            f"({type(last).__name__}: {last})",
-            cause=last,
-            attempts=self.max_retries + 1,
-        )
+        """Request-level face of the shared :class:`RetryPolicy`: typed
+        evaluator errors are deterministic verdicts and propagate
+        immediately; anything else is retried with backoff, counted in
+        ``transient_retries``, and exhausts into a typed
+        :class:`TransientFailure`."""
+
+        def count(attempt: int, exc: BaseException) -> None:
+            self._counters["transient_retries"] += 1
+
+        return self.retry_policy.call(fn, describe="sweep", on_retry=count)
 
     def _group_abort_check(self, group: list[_Resolved]) -> Callable[[], None]:
         """The chunked sweep's between-chunk preemption point: raises
@@ -771,6 +785,9 @@ class PlanningService:
                     if self.hw_chunk is not None
                     else None
                 ),
+                retry_policy=self.retry_policy,
+                checkpoint_dir=self.checkpoint_dir,
+                hooks=self.faults,
             )
 
         t0 = self.clock()

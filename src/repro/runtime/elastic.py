@@ -1,4 +1,4 @@
-"""Elastic re-scaling: resume a checkpoint on a different mesh.
+"""Elastic re-scaling: resume on a different mesh, degrade a sick one.
 
 When the pod count changes (2 -> 1 after a pod loss, or 1 -> 2 on
 scale-up), the parameters and optimizer state are re-sharded from the
@@ -7,18 +7,45 @@ is re-keyed to the new host topology.  Nothing about the checkpoint format
 is mesh-specific (host numpy + pytree paths), so this is pure re-placement
 — the property that makes the 2-pod -> 1-pod test in
 tests/test_elastic.py work without any conversion step.
+
+The fleet sweep uses the same philosophy in miniature:
+:func:`sweep_degradation_ladder` is the layout fallback the evaluator's
+sharded co-search walks when its ``hardware`` mesh turns sick — the
+sharded program and the single-device program are bit-identical by
+construction (tests/test_multidevice.py), so degrading mid-sweep changes
+wall-clock, never answers.
+
+The model-stack imports are function-local so the evaluator core can use
+the ladder without pulling the training stack into its import graph.
 """
 from __future__ import annotations
 
-import jax
 
-from .. import checkpoint as CKPT
-from ..models import model as M
-from ..optim import AdamWConfig, init_opt_state
-from ..parallel import sharding as SH
+def sweep_degradation_ladder(devices) -> tuple:
+    """Device layouts a sick sweep falls back through, best first.
+
+    ``devices`` is :func:`repro.core.flow.run_fleet`'s layout spec (None
+    = single-device; an int or device sequence = a 1-D ``hardware``
+    mesh).  The ladder is the requested layout followed by the
+    single-device program — the one layout that needs no collective
+    runtime at all, so it survives any mesh sickness.  Results are
+    bit-identical at every rung (the sharded kernel is row-parallel with
+    no cross-row reduction), so walking down the ladder trades only
+    throughput, never correctness.
+    """
+    if devices is None:
+        return (None,)
+    return (devices, None)
 
 
-def shardings_for(cfg, mesh, opt_cfg: AdamWConfig):
+def shardings_for(cfg, mesh, opt_cfg):
+    """(param, opt-state) shardings of config ``cfg`` on ``mesh``."""
+    import jax
+
+    from ..models import model as M
+    from ..optim import init_opt_state
+    from ..parallel import sharding as SH
+
     aparams = M.abstract_params(cfg)
     pshard = SH.param_shardings(mesh, aparams)
     aopt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), aparams)
@@ -26,12 +53,17 @@ def shardings_for(cfg, mesh, opt_cfg: AdamWConfig):
     return pshard, oshard
 
 
-def resume_on_mesh(ckpt_dir, step: int, cfg, new_mesh, *,
-                   opt_cfg: AdamWConfig | None = None):
+def resume_on_mesh(ckpt_dir, step: int, cfg, new_mesh, *, opt_cfg=None):
     """Restore step ``step`` re-sharded onto ``new_mesh``.
 
     Returns (params, opt_state) as jax Arrays with the new placement.
     """
+    import jax
+
+    from .. import checkpoint as CKPT
+    from ..models import model as M
+    from ..optim import AdamWConfig, init_opt_state
+
     opt_cfg = opt_cfg or AdamWConfig()
     aparams = M.abstract_params(cfg)
     aopt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), aparams)

@@ -32,6 +32,46 @@ import jax
 from .. import checkpoint as CKPT
 
 
+class StragglerDetector:
+    """Running-median wall-time deadline shared by the training driver and
+    the fleet sweep's chunk loop.
+
+    ``observe(dt)`` feeds one duration; ``is_straggler(dt)`` is True when
+    ``dt`` exceeds ``factor x`` the running median of the last ``window``
+    observations (never below ``min_deadline_s``), once at least
+    ``min_samples`` durations are in.  The detector only *flags* — what to
+    do about a straggler (re-dispatch the step, record the chunk index)
+    is the caller's policy.
+    """
+
+    def __init__(self, *, factor: float = 3.0, min_deadline_s: float = 0.05,
+                 min_samples: int = 5, window: int = 50):
+        self.factor = float(factor)
+        self.min_deadline_s = float(min_deadline_s)
+        self.min_samples = int(min_samples)
+        self.window = int(window)
+        self._durations: list[float] = []
+
+    def deadline(self) -> float:
+        """Current straggler deadline; +inf until min_samples are in."""
+        if len(self._durations) < self.min_samples:
+            return float("inf")
+        return max(
+            self.min_deadline_s,
+            self.factor * statistics.median(self._durations),
+        )
+
+    def is_straggler(self, dt: float) -> bool:
+        """True when ``dt`` breaches the current deadline."""
+        return dt > self.deadline()
+
+    def observe(self, dt: float) -> None:
+        """Record one duration (bounded window)."""
+        self._durations.append(float(dt))
+        if len(self._durations) > self.window:
+            self._durations.pop(0)
+
+
 @dataclasses.dataclass
 class TrainerReport:
     steps_run: int = 0
@@ -64,7 +104,9 @@ class ResilientTrainer:
         self.failure_hook = failure_hook
         self.checkpointer = CKPT.AsyncCheckpointer(ckpt_dir)
         self.report = TrainerReport()
-        self._durations: list[float] = []
+        self.straggler = StragglerDetector(
+            factor=straggler_factor, min_deadline_s=min_deadline_s
+        )
 
     # ------------------------------------------------------------------
     def _heartbeat(self, step: int):
@@ -109,20 +151,13 @@ class ResilientTrainer:
                 continue
 
             # Straggler detection + deterministic re-dispatch.
-            if len(self._durations) >= 5:
-                deadline = max(
-                    self.min_deadline_s,
-                    self.straggler_factor * statistics.median(self._durations),
+            if self.straggler.is_straggler(dt):
+                self.report.stragglers += 1
+                params, opt_state, metrics, dt = self._run_one(
+                    params, opt_state, step, batch
                 )
-                if dt > deadline:
-                    self.report.stragglers += 1
-                    params, opt_state, metrics, dt = self._run_one(
-                        params, opt_state, step, batch
-                    )
-                    self.report.redispatches += 1
-            self._durations.append(dt)
-            if len(self._durations) > 50:
-                self._durations.pop(0)
+                self.report.redispatches += 1
+            self.straggler.observe(dt)
 
             loss = float(metrics["loss"])
             self.report.steps_run += 1

@@ -127,6 +127,13 @@ class InjectedTransient(RuntimeError):
     service must classify it as retryable."""
 
 
+class InjectedShardFailure(RuntimeError):
+    """The injected stand-in for a shard/chunk compute failure (a sick
+    device, a collective timeout).  Also NOT an EvaluatorError: the
+    per-chunk :class:`repro.core.errors.RetryPolicy` must classify it as
+    retryable and salvage the sweep."""
+
+
 class FaultInjector:
     """Configurable fault hooks for :class:`PlanningService`.
 
@@ -149,7 +156,19 @@ class FaultInjector:
     ``corrupt_audit_every``   — every k-th shadow audit perturbs the
                                 oracle's energy by +1 nJ (0 = off), so
                                 the AuditMismatch path is exercisable
-                                without a real evaluator bug.
+                                without a real evaluator bug;
+    ``shard_fail_chunks``     — the first N ``before_chunk_compute``
+                                calls raise :class:`InjectedShardFailure`
+                                (chunk-salvage retry path);
+    ``shard_fail_every``      — additionally every k-th chunk compute
+                                raises once (0 = off);
+    ``mesh_fail_sweeps``      — the first N chunk computes *on a multi-
+                                device mesh* raise, driving the sweep
+                                down the single-device degradation rung;
+    ``poison_cell``           — a ``(g, h, c)`` triple whose raw cost row
+                                ``poison_plane`` overwrites with
+                                ``poison_value`` (quarantine path);
+    ``poison_value``          — what to write there (default NaN).
     """
 
     def __init__(
@@ -162,6 +181,11 @@ class FaultInjector:
         evict_every: int = 0,
         chunk_stall_seconds: float = 0.0,
         corrupt_audit_every: int = 0,
+        shard_fail_chunks: int = 0,
+        shard_fail_every: int = 0,
+        mesh_fail_sweeps: int = 0,
+        poison_cell: tuple | None = None,
+        poison_value: float = float("nan"),
         sleep=time.sleep,
     ):
         self.transient_sweeps = int(transient_sweeps)
@@ -171,6 +195,13 @@ class FaultInjector:
         self.evict_every = int(evict_every)
         self.chunk_stall_seconds = float(chunk_stall_seconds)
         self.corrupt_audit_every = int(corrupt_audit_every)
+        self.shard_fail_chunks = int(shard_fail_chunks)
+        self.shard_fail_every = int(shard_fail_every)
+        self.mesh_fail_sweeps = int(mesh_fail_sweeps)
+        self.poison_cell = (
+            None if poison_cell is None else tuple(int(v) for v in poison_cell)
+        )
+        self.poison_value = float(poison_value)
         self.sleep = sleep
         self.counts = collections.Counter()
 
@@ -204,6 +235,45 @@ class FaultInjector:
         self.counts["chunks"] += 1
         if self.chunk_stall_seconds > 0:
             self.sleep(self.chunk_stall_seconds)
+
+    def before_chunk_compute(self, chunk_index: int, *,
+                             device_count: int = 1) -> None:
+        """run_fleet's per-chunk compute hook: raise here to simulate a
+        shard failure (retried by the chunk RetryPolicy) or a sick mesh
+        (``device_count > 1`` — drives the degradation ladder)."""
+        self.counts["chunk_computes"] += 1
+        if self.mesh_fail_sweeps > 0 and device_count > 1:
+            self.mesh_fail_sweeps -= 1
+            self.counts["injected_mesh_failures"] += 1
+            raise InjectedShardFailure(
+                f"injected mesh failure (devices={device_count})"
+            )
+        if self.shard_fail_chunks > 0:
+            self.shard_fail_chunks -= 1
+            self.counts["injected_shard_failures"] += 1
+            raise InjectedShardFailure(
+                f"injected shard failure at chunk {chunk_index}"
+            )
+        if self.shard_fail_every and (
+            self.counts["chunk_computes"] % self.shard_fail_every == 0
+        ):
+            self.counts["injected_shard_failures"] += 1
+            raise InjectedShardFailure(
+                f"injected periodic shard failure at chunk {chunk_index}"
+            )
+
+    def poison_plane(self, plane, h0: int):
+        """run_fleet's raw-plane hook: overwrite ``poison_cell``'s cost
+        row with ``poison_value`` when that cell lives in this chunk —
+        the finite guard must quarantine it before any selection."""
+        if self.poison_cell is None:
+            return plane
+        g, h, c = self.poison_cell
+        if h0 <= h < h0 + plane.shape[1]:
+            plane = np.array(plane, copy=True)
+            plane[g, h - h0, c, :] = self.poison_value
+            self.counts["poisoned_cells"] += 1
+        return plane
 
     def corrupt_audit(self, metrics):
         self.counts["audits_seen"] += 1

@@ -188,3 +188,124 @@ def test_service_doc_names_real_paths_and_knobs() -> None:
                  "watchdog_seconds"):
         assert knob in text, knob
         assert knob in params, knob
+
+
+# ---------------------------------------------------------------------------
+# docs/RESILIENCE.md — quarantine / salvage / resumable-checkpoint contract
+# ---------------------------------------------------------------------------
+
+RESILIENCE_DOC = DOC.with_name("RESILIENCE.md")
+
+
+def _resilience_rows(section_heading: str) -> list[list[str]]:
+    """Body rows of the (single) markdown table under ``section_heading``."""
+    text = RESILIENCE_DOC.read_text()
+    section = text.split(section_heading, 1)[1].split("\n## ", 1)[0]
+    rows = []
+    for line in section.splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if set(cells[1]) <= {"-", " "}:
+            continue  # separator
+        rows.append(cells)
+    header, body = rows[0], rows[1:]
+    assert body, f"no table under {section_heading!r} in docs/RESILIENCE.md"
+    return body
+
+
+def test_resilience_doc_taxonomy_verdicts_are_real_errors() -> None:
+    from repro.core import errors
+
+    documented = set()
+    for row in _resilience_rows("## Fault taxonomy"):
+        documented |= {
+            name for name in _ticked(row[2]) if name.endswith("Error")
+            or name in ("TransientFailure", "JournalCorrupt")
+        }
+    for name in documented:
+        assert hasattr(errors, name), name
+        assert issubclass(getattr(errors, name), errors.EvaluatorError), name
+    for required in ("PoisonedResultError", "TransientFailure",
+                     "JournalCorrupt", "GraphValidationError"):
+        assert required in documented, required
+
+
+def test_resilience_doc_checkpoint_record_table_matches_code() -> None:
+    from repro import checkpoint
+
+    documented = [_ticked(row[0]).pop() for row in
+                  _resilience_rows("## Checkpoint record types")]
+    # exact vocabulary AND order: the doc table is the chunk log's contract
+    assert documented == list(checkpoint.SWEEP_RECORD_TYPES), (
+        f"docs table: {documented} vs SWEEP_RECORD_TYPES: "
+        f"{list(checkpoint.SWEEP_RECORD_TYPES)}"
+    )
+
+
+def test_resilience_doc_retry_knob_table_matches_dataclass() -> None:
+    import dataclasses as dc
+
+    from repro.core.errors import RetryPolicy
+
+    rows = _resilience_rows("## Retry policy knobs")
+    documented = [_ticked(row[0]).pop() for row in rows]
+    fields = {f.name: f for f in dc.fields(RetryPolicy)}
+    assert documented == list(fields), (
+        f"docs table: {documented} vs RetryPolicy fields: {list(fields)}"
+    )
+    for row in rows:
+        name = _ticked(row[0]).pop()
+        assert _ticked(row[1]).pop() == repr(fields[name].default), (
+            f"{name}: doc default {row[1]} vs code {fields[name].default!r}"
+        )
+
+
+def test_resilience_doc_injector_knobs_and_hooks_are_real() -> None:
+    import inspect
+
+    from repro.testing.faults import FaultInjector
+
+    text = RESILIENCE_DOC.read_text()
+    params = set(inspect.signature(FaultInjector.__init__).parameters)
+    for knob in ("shard_fail_chunks", "shard_fail_every", "mesh_fail_sweeps",
+                 "poison_cell", "poison_value", "transient_sweeps",
+                 "chunk_stall_seconds"):
+        assert knob in text, knob
+        assert knob in params, knob
+    for hook in ("before_chunk_compute", "poison_plane"):
+        assert hook in text, hook
+        assert callable(getattr(FaultInjector, hook)), hook
+
+
+def test_resilience_doc_names_real_symbols_and_paths() -> None:
+    text = RESILIENCE_DOC.read_text()
+    root = RESILIENCE_DOC.parents[1]
+    for rel in ("tests/test_salvage.py", "tests/test_salvage_property.py",
+                "tests/test_faults.py", "benchmarks/bench_shard.py"):
+        assert rel in text, rel
+        assert (root / rel).exists(), rel
+    from repro.core import flow, metrics
+    from repro.core.service import PlanningService
+    from repro.runtime import elastic, fault_tolerance
+
+    assert "poison_mask" in text and hasattr(metrics, "poison_mask")
+    assert "assert_exact_f64" in text and hasattr(metrics, "assert_exact_f64")
+    assert "MAX_EXACT_WORDS" in text and metrics.MAX_EXACT_WORDS == 2.0 ** 53
+    assert "sweep_degradation_ladder" in text
+    assert callable(elastic.sweep_degradation_ladder)
+    assert "StragglerDetector" in text
+    assert callable(fault_tolerance.StragglerDetector)
+    for field in ("chunks_restored", "chunks_computed", "straggler_chunks",
+                  "mesh_degraded", "quarantine"):
+        assert field in text, field
+        assert field in {f.name for f in __import__("dataclasses").fields(
+            flow.FleetResult)}, field
+    import inspect
+
+    params = set(inspect.signature(PlanningService.__init__).parameters)
+    run_fleet_params = set(inspect.signature(flow.run_fleet).parameters)
+    for knob in ("retry_policy", "checkpoint_dir"):
+        assert knob in text, knob
+        assert knob in params and knob in run_fleet_params, knob

@@ -144,6 +144,42 @@ def test_chaos_sweep_500_requests_all_typed():
         assert resp.plan.best_hw == ref.best_hw
 
 
+def test_chaos_sweep_with_active_shard_faults_all_typed():
+    """The chunked-sweep variant of the chaos sweep: recurring shard
+    failures inside the chunk loop (salvaged by the shared RetryPolicy)
+    on top of the transient/stall/eviction faults.  The contract is the
+    same — 100% typed responses, zero raw exceptions."""
+    n = 200
+    inj = F.FaultInjector(
+        shard_fail_every=13,  # recurring chunk-compute shard failures
+        transient_every=17,
+        evict_every=11,
+    )
+    svc = PlanningService(
+        config_space=SPACE, faults=inj, backoff_seconds=0.0,
+        hw_chunk=5, max_batch=8, max_queue_depth=n,
+    )
+    labels = {}
+    for label, req in F.chaos_requests(n, seed=13):
+        labels[svc.submit(req)] = label
+    svc.drain()
+    ok = 0
+    for rid, label in labels.items():
+        resp = svc.collect(rid)
+        assert resp is not None, f"request {rid} ({label}) got no response"
+        if resp.ok:
+            ok += 1
+        else:
+            assert isinstance(resp.error, EvaluatorError), (
+                f"request {rid} ({label}) leaked "
+                f"{type(resp.error).__name__}"
+            )
+    assert ok > 0
+    # the shard-fault path was genuinely exercised and salvaged
+    assert inj.counts["injected_shard_failures"] > 0
+    assert inj.counts["chunk_computes"] > 0
+
+
 # chaos_requests yields the request objects; the audit above needs them
 # back by rid, so the test records them here as it submits.
 _REQUESTS_BY_RID = {}

@@ -1,0 +1,524 @@
+"""Fault-tolerant fleet sweeps: poison quarantine, shard salvage, and
+resumable co-search checkpoints.
+
+The contract under test (docs/RESILIENCE.md):
+
+* a sharded sweep killed at ANY hw-chunk boundary resumes bit-identically
+  with exactly-once chunk recomputation (``checkpoint_dir=``);
+* an injected NaN/Inf/negative/overflow cell is quarantined with
+  (graph, hw, cut) provenance and can never win the argmin or enter a
+  Pareto front; only a fully-poisoned graph raises
+  :class:`PoisonedResultError`;
+* chunk/shard failures are salvaged by the shared :class:`RetryPolicy`;
+  a sick mesh degrades to the single-device program bit-identically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import SweepCheckpoint, sweep_fingerprint
+from repro.core import flow, metrics as M
+from repro.core.arch import Constraints, config_space_grid
+from repro.core.errors import (
+    EvaluatorError,
+    GraphValidationError,
+    JournalCorrupt,
+    PoisonedResultError,
+    RetryPolicy,
+    TransientFailure,
+)
+from repro.core.ir import as_graph, residual_block_ir
+from repro.core.service import PlanRequest, PlanningService
+from repro.runtime.fault_tolerance import StragglerDetector
+from repro.testing.faults import FaultInjector, InjectedShardFailure
+
+RELAXED = Constraints(*[float("inf")] * 4)
+SMALL_GRID = config_space_grid(
+    f1s=(2, 4), f2s=(2, 4), f3s=(2, 4), f4s=(2, 4),
+    bus_widths=(2, 4), sram_splits=("unified",),
+)  # 32 configs -> 4 chunks of 8
+HW_CHUNK = 8
+N_CHUNKS = -(-len(SMALL_GRID) // HW_CHUNK)
+
+
+def _graph():
+    return as_graph(residual_block_ir())
+
+
+def _cut_batch(g):
+    """Explicit (C, E) grouping batch with a known candidate order."""
+    rng = np.random.default_rng(11)
+    rows = [np.ones(g.n_edges, bool), np.zeros(g.n_edges, bool)]
+    rows += [rng.random(g.n_edges) < 0.5 for _ in range(4)]
+    return np.unique(np.stack(rows), axis=0)
+
+
+def _run(g, batch, **kw):
+    kw.setdefault("config_space", SMALL_GRID)
+    kw.setdefault("constraints", RELAXED)
+    return flow.run_fleet([g], groupings=[batch], **kw)
+
+
+def _assert_same_fleet(a, b):
+    """Bit-identity of two FleetResults' answers (not their timings)."""
+    assert a.n_graphs == b.n_graphs and a.n_candidates == b.n_candidates
+    for ra, rb in zip(a.results, b.results):
+        assert ra.best_hw == rb.best_hw
+        assert np.array_equal(ra.best_cuts, rb.best_cuts)
+        assert ra.best_metrics == rb.best_metrics  # exact float equality
+        assert ra.group_sizes == rb.group_sizes
+        assert ra.n_feasible == rb.n_feasible
+
+
+def _winner_cell(res, batch, space):
+    """(h, c) indices of a FlowResult's argmin in the swept grid."""
+    h = next(
+        i for i, cfg in enumerate(space)
+        if np.array_equal(cfg.as_row(), res.best_hw.as_row())
+    )
+    c = next(
+        i for i in range(batch.shape[0])
+        if np.array_equal(batch[i], res.best_cuts)
+    )
+    return h, c
+
+
+class _KillSwitch(Exception):
+    """The simulated process kill (NOT an EvaluatorError: nothing below
+    the test may absorb it)."""
+
+
+def _killer(n_allowed: int):
+    """abort_check that lets ``n_allowed`` boundary checks pass, then
+    kills the sweep."""
+    calls = {"n": 0}
+
+    def check():
+        calls["n"] += 1
+        if calls["n"] > n_allowed:
+            raise _KillSwitch(f"killed at boundary check {calls['n']}")
+
+    return check
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy (the one shared retry/backoff implementation)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_delay_schedule_is_capped():
+    p = RetryPolicy(max_retries=5, backoff_seconds=0.1, multiplier=2.0,
+                    max_backoff_seconds=0.3)
+    assert [p.delay(i) for i in range(4)] == [0.1, 0.2, 0.3, 0.3]
+
+
+def test_retry_policy_validates_knobs():
+    for kw in ({"max_retries": -1}, {"backoff_seconds": -0.1},
+               {"multiplier": 0.5}, {"max_backoff_seconds": -1.0}):
+        with pytest.raises(ValueError):
+            RetryPolicy(**kw)
+
+
+def test_retry_policy_retries_transients_then_succeeds():
+    p = RetryPolicy(max_retries=3, backoff_seconds=0.1, multiplier=2.0)
+    slept, retried, state = [], [], {"fails": 2}
+
+    def fn():
+        if state["fails"]:
+            state["fails"] -= 1
+            raise RuntimeError("flake")
+        return "ok"
+
+    out = p.call(fn, sleep=slept.append,
+                 on_retry=lambda a, e: retried.append((a, type(e).__name__)))
+    assert out == "ok"
+    assert slept == [p.delay(0), p.delay(1)]
+    assert retried == [(0, "RuntimeError"), (1, "RuntimeError")]
+
+
+def test_retry_policy_never_retries_typed_evaluator_errors():
+    p = RetryPolicy(max_retries=5, backoff_seconds=1.0)
+    slept, calls = [], {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise GraphValidationError("deterministic verdict")
+
+    with pytest.raises(GraphValidationError):
+        p.call(fn, sleep=slept.append)
+    assert calls["n"] == 1 and slept == []
+
+
+def test_retry_policy_exhaustion_is_typed():
+    p = RetryPolicy(max_retries=2, backoff_seconds=0.0)
+
+    def fn():
+        raise KeyError("persistent")
+
+    with pytest.raises(TransientFailure) as ei:
+        p.call(fn, describe="hw chunk 3")
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.cause, KeyError)
+    assert "hw chunk 3 failed after 3 attempts" in str(ei.value)
+    assert isinstance(ei.value, EvaluatorError)
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detector_warms_up_then_flags():
+    d = StragglerDetector(factor=3.0, min_deadline_s=0.0, min_samples=5)
+    for _ in range(4):
+        assert d.deadline() == float("inf")  # warm-up: never flags
+        d.observe(0.1)
+    assert not d.is_straggler(100.0)  # 4 samples: still warming up
+    d.observe(0.1)
+    assert d.deadline() == pytest.approx(0.3)
+    assert d.is_straggler(0.31) and not d.is_straggler(0.29)
+
+
+def test_straggler_detector_window_is_bounded():
+    d = StragglerDetector(window=10)
+    for i in range(100):
+        d.observe(float(i))
+    assert len(d._durations) == 10 and d._durations[0] == 90.0
+
+
+# ---------------------------------------------------------------------------
+# poison_mask / assert_exact_f64 (the finite guard itself)
+# ---------------------------------------------------------------------------
+
+
+def test_poison_mask_flags_each_poison_kind():
+    raw = np.ones((2, 3, 5))
+    raw[0, 0, 1] = np.nan
+    raw[0, 2, 0] = np.inf
+    raw[1, 1, 4] = -1.0
+    raw[1, 2, 2] = 2.0 ** 60  # beyond f64 integer exactness
+    mask = M.poison_mask(raw)
+    assert mask.tolist() == [[True, False, True], [False, True, True]]
+
+
+def test_assert_exact_f64_accepts_exact_and_names_offender():
+    M.assert_exact_f64(np.array([0.0, 1.0, 2.0 ** 53]))  # boundary is exact
+    for bad in (np.nan, np.inf, -1.0, 1.5, float(2 ** 53) * 2):
+        with pytest.raises(GraphValidationError, match="feature table"):
+            M.assert_exact_f64(np.array([1.0, bad]))
+
+
+# ---------------------------------------------------------------------------
+# poison quarantine in the sweep
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_nonwinner_never_perturbs_the_argmin():
+    g = _graph()
+    batch = _cut_batch(g)
+    clean = _run(g, batch)
+    h_win, c_win = _winner_cell(clean.results[0], batch, SMALL_GRID)
+    h_bad = (h_win + 1) % len(SMALL_GRID)  # poison a NON-winning cell
+    faults = FaultInjector(poison_cell=(0, h_bad, c_win))
+    r = _run(g, batch, hooks=faults)
+    assert faults.counts["poisoned_cells"] == 1
+    # selection among the clean cells is unchanged...
+    assert r.results[0].best_hw == clean.results[0].best_hw
+    assert np.array_equal(r.results[0].best_cuts, clean.results[0].best_cuts)
+    assert r.results[0].best_metrics == clean.results[0].best_metrics
+    # ...and exactly the poisoned cell left the feasible set
+    assert r.results[0].n_feasible == clean.results[0].n_feasible - 1
+    assert r.quarantine is not None and r.quarantine.n_cells == 1
+    cell = r.quarantine.cells[0]
+    assert (cell.graph, cell.hw, cell.cut) == (0, h_bad, c_win)
+    assert cell.reason == "nan" and cell.column in flow.RAW_COLUMNS
+    assert r.results[0].quarantine.cells == r.quarantine.cells
+
+
+def test_poisoned_winner_is_quarantined_not_selected():
+    g = _graph()
+    batch = _cut_batch(g)
+    clean = _run(g, batch)
+    h_win, c_win = _winner_cell(clean.results[0], batch, SMALL_GRID)
+    faults = FaultInjector(poison_cell=(0, h_win, c_win))
+    r = _run(g, batch, hooks=faults, pareto=True)
+    new_win = _winner_cell(r.results[0], batch, SMALL_GRID)
+    assert new_win != (h_win, c_win)  # the poisoned cell cannot win
+    assert r.results[0].n_feasible == clean.results[0].n_feasible - 1
+    assert "(g=0, h=" in r.quarantine.describe()
+    front = r.results[0].pareto
+    assert front is not None and np.isfinite(front.metrics).all()
+
+
+@pytest.mark.parametrize(
+    "value,reason",
+    [(float("inf"), "inf"), (-1.0, "negative"), (2.0 ** 60, "overflow")],
+)
+def test_quarantine_names_each_poison_reason(value, reason):
+    g = _graph()
+    batch = _cut_batch(g)
+    faults = FaultInjector(poison_cell=(0, 3, 0), poison_value=value)
+    r = _run(g, batch, hooks=faults)
+    assert r.quarantine.cells[0].reason == reason
+    assert r.quarantine.cells[0].value == value
+
+
+def test_fully_poisoned_graph_raises_typed_error():
+    g = _graph()
+    batch = _cut_batch(g)
+
+    class _PoisonEverything:
+        def poison_plane(self, plane, h0):
+            plane = np.array(plane, copy=True)
+            plane[...] = np.nan
+            return plane
+
+    with pytest.raises(PoisonedResultError) as ei:
+        _run(g, batch, hooks=_PoisonEverything())
+    assert ei.value.quarantined  # full per-cell provenance survives
+    assert isinstance(ei.value, ArithmeticError)  # dual inheritance
+    assert isinstance(ei.value, EvaluatorError)
+
+
+def test_quarantine_provenance_uses_global_hw_index_across_chunks():
+    g = _graph()
+    batch = _cut_batch(g)
+    h_bad = 2 * HW_CHUNK + 3  # lives in chunk 2 of the chunked sweep
+    faults = FaultInjector(poison_cell=(0, h_bad, 1))
+    r = _run(g, batch, hw_chunk=HW_CHUNK, hooks=faults)
+    assert faults.counts["poisoned_cells"] == 1
+    assert r.quarantine.cells[0].hw == h_bad  # global, not chunk-local
+
+
+# ---------------------------------------------------------------------------
+# chunk salvage + mesh degradation
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_failures_are_salvaged_by_retry_policy():
+    g = _graph()
+    batch = _cut_batch(g)
+    clean = _run(g, batch)
+    faults = FaultInjector(shard_fail_chunks=2)
+    r = _run(
+        g, batch, hw_chunk=HW_CHUNK, hooks=faults,
+        retry_policy=RetryPolicy(max_retries=3, backoff_seconds=0.0),
+    )
+    _assert_same_fleet(clean, r)
+    assert faults.counts["injected_shard_failures"] == 2
+    assert faults.counts["chunk_computes"] == N_CHUNKS + 2  # 2 retries
+    assert r.chunks_computed == N_CHUNKS
+
+
+def test_chunk_retry_exhaustion_is_typed():
+    g = _graph()
+    batch = _cut_batch(g)
+    with pytest.raises(TransientFailure) as ei:
+        _run(
+            g, batch, hw_chunk=HW_CHUNK,
+            hooks=FaultInjector(shard_fail_chunks=100),
+            retry_policy=RetryPolicy(max_retries=1, backoff_seconds=0.0),
+        )
+    assert ei.value.attempts == 2
+    assert isinstance(ei.value.cause, InjectedShardFailure)
+
+
+def test_without_retry_policy_shard_failures_propagate_raw():
+    g = _graph()
+    batch = _cut_batch(g)
+    with pytest.raises(InjectedShardFailure):
+        _run(g, batch, hw_chunk=HW_CHUNK,
+             hooks=FaultInjector(shard_fail_chunks=1))
+
+
+def test_sick_mesh_degrades_to_single_device_bit_identically():
+    g = _graph()
+    batch = _cut_batch(g)
+    clean = _run(g, batch)  # the plain single-device program
+    # Fail the mesh program through its whole retry budget (2 attempts),
+    # then heal: the degraded single-device rung must answer.
+    faults = FaultInjector(shard_fail_chunks=2)
+    r = _run(
+        g, batch, devices=1, hooks=faults,
+        retry_policy=RetryPolicy(max_retries=1, backoff_seconds=0.0),
+    )
+    assert r.mesh_degraded and r.device_count == 1
+    assert faults.counts["injected_shard_failures"] == 2  # retry budget
+    assert "degraded to single-device" in r.describe()
+    _assert_same_fleet(clean, r)
+
+
+# ---------------------------------------------------------------------------
+# SweepCheckpoint (the durable chunk store)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_checkpoint_roundtrip_is_bit_exact(tmp_path):
+    rng = np.random.default_rng(3)
+    planes = {0: rng.random((2, 4, 3, 5)), 4: rng.random((2, 4, 3, 5))}
+    ck = SweepCheckpoint(tmp_path)
+    assert ck.load("fp") == {}
+    for h0, p in planes.items():
+        ck.append_chunk(h0, p)
+    got = SweepCheckpoint(tmp_path).load("fp")
+    assert set(got) == {0, 4}
+    for h0 in planes:
+        assert got[h0].dtype == planes[h0].dtype
+        assert got[h0].tobytes() == planes[h0].tobytes()
+
+
+def test_sweep_checkpoint_requires_load_before_append(tmp_path):
+    with pytest.raises(ValueError, match="load"):
+        SweepCheckpoint(tmp_path).append_chunk(0, np.ones((1, 1, 1, 5)))
+
+
+def test_sweep_checkpoint_discards_foreign_fingerprint(tmp_path):
+    ck = SweepCheckpoint(tmp_path)
+    ck.load("sweep-a")
+    ck.append_chunk(0, np.ones((1, 2, 3, 5)))
+    other = SweepCheckpoint(tmp_path)
+    assert other.load("sweep-b") == {}  # never splice a different sweep
+    assert not ck.path.exists()
+
+
+def test_sweep_checkpoint_tolerates_torn_tail_only(tmp_path):
+    ck = SweepCheckpoint(tmp_path)
+    ck.load("fp")
+    ck.append_chunk(0, np.ones((1, 1, 1, 5)))
+    ck.append_chunk(1, np.full((1, 1, 1, 5), 2.0))
+    raw = ck.path.read_bytes()
+    ck.path.write_bytes(raw[: len(raw) - 40])  # tear the final record
+    got = SweepCheckpoint(tmp_path).load("fp")
+    assert list(got) == [0]  # the torn chunk simply recomputes
+    lines = raw.split(b"\n")
+    lines[1] = lines[1].replace(b'"h0": 0', b'"h0": 7')  # interior tamper
+    ck.path.write_bytes(b"\n".join(lines))
+    with pytest.raises(JournalCorrupt):
+        SweepCheckpoint(tmp_path).load("fp")
+
+
+def test_sweep_fingerprint_binds_every_input():
+    a = (np.ones((2, 3)), np.arange(4.0))
+    fp = sweep_fingerprint(a, 8)
+    assert fp == sweep_fingerprint(tuple(np.copy(x) for x in a), 8)
+    assert fp != sweep_fingerprint(a, 4)  # chunking is part of the key
+    b = (np.ones((2, 3)), np.arange(4.0) + 1)
+    assert fp != sweep_fingerprint(b, 8)
+
+
+# ---------------------------------------------------------------------------
+# resumable checkpoints: kill at EVERY chunk boundary
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_dir_requires_hw_chunk():
+    with pytest.raises(ValueError, match="hw_chunk"):
+        _run(_graph(), _cut_batch(_graph()), checkpoint_dir="/tmp/x")
+
+
+@pytest.mark.parametrize("kill_at", range(1, N_CHUNKS))
+def test_kill_at_every_chunk_boundary_resumes_bit_identically(
+    tmp_path, kill_at
+):
+    g = _graph()
+    batch = _cut_batch(g)
+    baseline = _run(g, batch, hw_chunk=HW_CHUNK)
+    first = FaultInjector()
+    with pytest.raises(_KillSwitch):
+        _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path,
+             abort_check=_killer(kill_at), hooks=first)
+    # chunks 0..kill_at-1 completed (and are durable) before the kill
+    assert first.counts["chunk_computes"] == kill_at
+    second = FaultInjector()
+    r = _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path,
+             hooks=second)
+    # exactly-once: the resumed run recomputes ONLY the missing chunks
+    assert r.chunks_restored == kill_at
+    assert r.chunks_computed == N_CHUNKS - kill_at
+    assert second.counts["chunk_computes"] == N_CHUNKS - kill_at
+    assert f"{kill_at} chunks restored" in r.describe()
+    _assert_same_fleet(baseline, r)
+
+
+def test_completed_checkpoint_resumes_with_zero_recompute(tmp_path):
+    g = _graph()
+    batch = _cut_batch(g)
+    baseline = _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path)
+    assert baseline.chunks_computed == N_CHUNKS
+    again = FaultInjector()
+    r = _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path,
+             hooks=again)
+    assert r.chunks_restored == N_CHUNKS and r.chunks_computed == 0
+    assert again.counts["chunk_computes"] == 0
+    _assert_same_fleet(baseline, r)
+
+
+def test_checkpoint_from_different_sweep_is_never_spliced(tmp_path):
+    g = _graph()
+    batch = _cut_batch(g)
+    _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path)
+    tighter = dataclasses.replace(
+        RELAXED, max_area_um2=1e12
+    )  # different constraints -> same fingerprint (sweep inputs identical)
+    r = _run(g, batch, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path,
+             constraints=tighter)
+    assert r.chunks_restored == N_CHUNKS  # constraints are post-sweep
+    smaller = _cut_batch(g)[:2]  # different sweep inputs -> new fingerprint
+    r2 = _run(g, smaller, hw_chunk=HW_CHUNK, checkpoint_dir=tmp_path)
+    assert r2.chunks_restored == 0 and r2.chunks_computed == N_CHUNKS
+    _assert_same_fleet(_run(g, smaller, hw_chunk=HW_CHUNK), r2)
+
+
+# ---------------------------------------------------------------------------
+# service integration: one RetryPolicy, salvage across request retries
+# ---------------------------------------------------------------------------
+
+
+def test_service_checkpoint_dir_requires_hw_chunk(tmp_path):
+    with pytest.raises(ValueError, match="hw_chunk"):
+        PlanningService(checkpoint_dir=tmp_path)
+
+
+def test_service_retry_policy_overrides_legacy_knobs():
+    p = RetryPolicy(max_retries=7, backoff_seconds=0.0)
+    svc = PlanningService(retry_policy=p)
+    assert svc.retry_policy is p
+    legacy = PlanningService(max_retries=2, backoff_seconds=0.125)
+    assert legacy.retry_policy == RetryPolicy(
+        max_retries=2, backoff_seconds=0.125
+    )
+
+
+def test_service_salvages_completed_chunks_across_request_retries(tmp_path):
+    g = _graph()
+
+    class _MidSweepCrash:
+        """Raises once from the 3rd between-chunk boundary check — AFTER
+        two chunks are durable — so the request-level retry must resume
+        instead of recomputing."""
+
+        def __init__(self):
+            self.chunks = 0
+            self.fired = False
+
+        def before_chunk(self):
+            self.chunks += 1
+            if self.chunks == 3 and not self.fired:
+                self.fired = True
+                raise InjectedShardFailure("mid-sweep crash")
+
+    faults = _MidSweepCrash()
+    svc = PlanningService(
+        config_space=SMALL_GRID, hw_chunk=HW_CHUNK,
+        checkpoint_dir=tmp_path, faults=faults, backoff_seconds=0.0,
+    )
+    resp = svc.plan(PlanRequest(graph=g))
+    assert resp.ok and faults.fired
+    assert svc.stats()["counters"]["transient_retries"] == 1
+    ref = flow.run_fleet(
+        [g], config_space=SMALL_GRID, groupings="search",
+    ).results[0]
+    assert resp.plan.best_metrics == ref.best_metrics
+    assert np.array_equal(resp.plan.best_cuts, ref.best_cuts)
+    assert resp.plan.best_hw == ref.best_hw

@@ -1,0 +1,92 @@
+"""Hypothesis property: quarantine is exact and selection-neutral.
+
+For ARBITRARY poison placement — any (hw, cut) cell, any poison kind
+(NaN / Inf / negative / >2^53) — the finite guard must (a) quarantine
+exactly the injected cell with correct provenance, (b) never let it win
+the argmin, and (c) leave the selection among clean cells bit-identical
+whenever the poisoned cell was not the clean winner.  Deterministic
+single-placement locks live in tests/test_salvage.py (this module is
+skipped entirely when hypothesis is absent, per suite convention).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flow
+from repro.core.arch import Constraints, config_space_grid
+from repro.core.ir import as_graph, residual_block_ir
+from repro.testing.faults import FaultInjector
+
+RELAXED = Constraints(*[float("inf")] * 4)
+SMALL_GRID = config_space_grid(
+    f1s=(2, 4), f2s=(2,), f3s=(2, 4), f4s=(2,),
+    bus_widths=(2,), sram_splits=("unified",),
+)
+GRAPH = as_graph(residual_block_ir())
+
+
+def _batch():
+    rng = np.random.default_rng(5)
+    rows = [np.ones(GRAPH.n_edges, bool), np.zeros(GRAPH.n_edges, bool)]
+    rows += [rng.random(GRAPH.n_edges) < 0.5 for _ in range(3)]
+    return np.unique(np.stack(rows), axis=0)
+
+
+BATCH = _batch()
+CLEAN = flow.run_fleet(
+    [GRAPH], config_space=SMALL_GRID, constraints=RELAXED,
+    groupings=[BATCH],
+)
+
+
+def _winner(res):
+    h = next(
+        i for i, cfg in enumerate(SMALL_GRID)
+        if np.array_equal(cfg.as_row(), res.best_hw.as_row())
+    )
+    c = next(
+        i for i in range(BATCH.shape[0])
+        if np.array_equal(BATCH[i], res.best_cuts)
+    )
+    return h, c
+
+
+POISONS = {
+    "nan": float("nan"),
+    "inf": float("inf"),
+    "negative": -3.0,
+    "overflow": 2.0 ** 60,
+}
+
+
+@given(
+    h=st.integers(0, len(SMALL_GRID) - 1),
+    c=st.integers(0, BATCH.shape[0] - 1),
+    kind=st.sampled_from(sorted(POISONS)),
+)
+@settings(max_examples=40, deadline=None)
+def test_arbitrary_poison_is_quarantined_and_never_selected(h, c, kind):
+    faults = FaultInjector(poison_cell=(0, h, c),
+                           poison_value=POISONS[kind])
+    r = flow.run_fleet(
+        [GRAPH], config_space=SMALL_GRID, constraints=RELAXED,
+        groupings=[BATCH], hooks=faults,
+    )
+    # (a) exactly the injected cell, with exact provenance
+    assert faults.counts["poisoned_cells"] == 1
+    assert r.quarantine is not None and r.quarantine.n_cells == 1
+    cell = r.quarantine.cells[0]
+    assert (cell.graph, cell.hw, cell.cut) == (0, h, c)
+    assert cell.reason == kind
+    # (b) the poisoned cell can never win
+    assert _winner(r.results[0]) != (h, c)
+    assert r.results[0].n_feasible == CLEAN.results[0].n_feasible - 1
+    # (c) a poisoned non-winner leaves the clean argmin bit-identical
+    if (h, c) != _winner(CLEAN.results[0]):
+        assert r.results[0].best_hw == CLEAN.results[0].best_hw
+        assert np.array_equal(
+            r.results[0].best_cuts, CLEAN.results[0].best_cuts
+        )
+        assert r.results[0].best_metrics == CLEAN.results[0].best_metrics
